@@ -1,0 +1,189 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (spec format):
+  * fig1_service_time_table   — S(n,e,c) corners + dynamic range (paper Fig 1)
+  * fig3_utilization_sweep    — solid/uniform utilization vs image size
+                                (paper Fig 3, v5e-adapted)
+  * fig4_popc_vs_fao          — instruction-class effect (paper Fig 4)
+  * fig5_reorder_speedup      — hist2-vs-hist predicted speedup (paper Fig 5)
+  * moe_dispatch_profile      — router balance -> scatter-unit utilization
+                                (framework integration of the model)
+  * kernel_walltime           — interpret-mode Pallas kernel wall times
+                                (regression canary; not TPU numbers)
+  * roofline_table            — per (arch x shape x mesh) terms from the
+                                dry-run artifacts (results/dryrun/*.json)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bottleneck, microbench, profiler
+from repro.data.images import make_image
+from repro.kernels.histogram import ops as hist_ops
+from repro.kernels.scatter_add import ops as scat_ops
+
+TABLE = microbench.build_table()
+ROWS: list[str] = []
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    row = f"{name},{us:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _timeit(fn, repeats=3):
+    fn()  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def _profile(kind, n_pixels, variant="hist", force_fao=True,
+             waves_per_tile=32):
+    img = make_image(kind, n_pixels)
+    _, trace = hist_ops.histogram_instrumented(
+        jnp.asarray(img), variant=variant, force_fao=force_fao)
+    trace.waves_per_tile = waves_per_tile
+    return profiler.profile_scatter_workload(
+        trace, TABLE, label=f"{kind}-{variant}",
+        bytes_read=float(n_pixels * 4), overhead_cycles=500.0)
+
+
+def fig1_service_time_table() -> None:
+    t0 = time.perf_counter()
+    tab = microbench.build_table()
+    us = (time.perf_counter() - t0) * 1e6
+    corners = {
+        "S(1,1,0)": tab.service_time(1, 1, 0),
+        "S(64,1,0)": tab.service_time(64, 1, 0),
+        "S(64,32,0)": tab.service_time(64, 32, 0),
+        "S(64,32,c=64)": tab.service_time(64, 32, 64),
+        "S_popc(64,32)": tab.popc_service_time(64, 32),
+    }
+    rng = float(tab.service_time(1, 32, 1) / tab.service_time(64, 1, 0))
+    emit("fig1_service_time_table", us,
+         ";".join(f"{k}={float(v):.2f}cyc" for k, v in corners.items())
+         + f";dynamic_range={rng:.1f}x")
+
+
+def fig3_utilization_sweep() -> None:
+    for kind in ("solid", "uniform"):
+        for p in (12, 16, 20):
+            t0 = time.perf_counter()
+            prof = _profile(kind, 1 << p)
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"fig3_utilization_{kind}_2^{p}", us,
+                 f"U={prof.scatter_utilization:.3f};"
+                 f"e={prof.per_core[0].e:.2f};"
+                 f"bottleneck={prof.bottleneck}")
+
+
+def fig4_popc_vs_fao() -> None:
+    fao = _profile("solid", 1 << 18, force_fao=True)
+    popc = _profile("solid", 1 << 18, force_fao=False)
+    emit("fig4_popc_vs_fao", 0.0,
+         f"U_fao={fao.scatter_utilization:.3f};"
+         f"U_popc={popc.scatter_utilization:.3f};"
+         f"ratio={popc.scatter_utilization / fao.scatter_utilization:.2f}")
+
+
+def fig5_reorder_speedup() -> None:
+    for kind in ("solid", "uniform"):
+        base = _profile(kind, 1 << 18, variant="hist")
+        reord = _profile(kind, 1 << 18, variant="hist2")
+        sp = bottleneck.speedup_estimate(base, reord)
+        emit(f"fig5_reorder_speedup_{kind}", 0.0,
+             f"speedup={sp:.3f};U_before={base.scatter_utilization:.2f};"
+             f"U_after={reord.scatter_utilization:.2f}")
+
+
+def moe_dispatch_profile() -> None:
+    """Router balance as the 'image color distribution' of MoE dispatch."""
+    rng = np.random.default_rng(0)
+    n_tokens, experts = 1 << 16, 128
+    for label, ids in (
+            ("balanced", rng.integers(0, experts, n_tokens)),
+            ("skewed", rng.zipf(1.3, n_tokens) % experts),
+            ("collapsed", np.zeros(n_tokens, np.int64))):
+        _, c = scat_ops.instrumented_scatter_add(
+            ids.astype(np.int32), np.ones((n_tokens, 1), np.float32),
+            experts)
+        tr = c["trace"]
+        tr.waves_per_tile = 32
+        prof = profiler.profile_scatter_workload(
+            tr, TABLE, label=label, bytes_read=float(n_tokens * 4),
+            overhead_cycles=500.0)
+        emit(f"moe_dispatch_{label}", 0.0,
+             f"e={prof.per_core[0].e:.2f};U={prof.scatter_utilization:.3f};"
+             f"bottleneck={prof.bottleneck}")
+
+
+def kernel_walltime() -> None:
+    img = jnp.asarray(make_image("uniform", 1 << 16))
+    us = _timeit(lambda: hist_ops.histogram(img).block_until_ready())
+    emit("kernel_walltime_histogram_64kpx", us,
+         f"{(1 << 16) * 4 / (us / 1e6) / 1e6:.1f}Mupd/s(interpret)")
+    ids = jnp.asarray(np.random.default_rng(0).integers(0, 128, 1 << 14),
+                      jnp.int32)
+    vals = jnp.ones((1 << 14, 64), jnp.float32)
+    us = _timeit(lambda: scat_ops.scatter_add(
+        vals, ids, num_segments=128).block_until_ready())
+    emit("kernel_walltime_scatter_add_16k", us,
+         f"{(1 << 14) / (us / 1e6) / 1e6:.2f}Mrow/s(interpret)")
+
+
+def roofline_table() -> None:
+    pat = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun",
+                       "*.json")
+    files = sorted(glob.glob(pat))
+    n_ok = n_skip = n_err = 0
+    for f in files:
+        r = json.load(open(f))
+        if r["status"] == "ok":
+            n_ok += 1
+            t = r["roofline"]
+            emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                 r.get("compile_seconds", 0) * 1e6,
+                 f"dominant={t['dominant']};useful={t['useful_ratio']:.3f};"
+                 f"roofline={t['roofline_fraction']:.4f};"
+                 f"compute_ms={t['compute_s'] * 1e3:.2f};"
+                 f"memory_ms={t['memory_s'] * 1e3:.2f};"
+                 f"collective_ms={t['collective_s'] * 1e3:.2f}")
+        elif r["status"] == "skipped":
+            n_skip += 1
+        else:
+            n_err += 1
+    emit("roofline_summary", 0.0,
+         f"ok={n_ok};skipped={n_skip};errors={n_err}")
+
+
+ALL = [fig1_service_time_table, fig3_utilization_sweep, fig4_popc_vs_fao,
+       fig5_reorder_speedup, moe_dispatch_profile, kernel_walltime,
+       roofline_table]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serving example: batched generation with an attention-free (O(1)-state)
+model and a windowed hybrid — the two long_500k-capable families.
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    for arch in ("rwkv6-7b", "zamba2-1.2b"):
+        serve_cli.main(["--arch", arch, "--reduced", "--batch", "4",
+                        "--prompt-len", "12", "--gen", "20"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Render the EXPERIMENTS.md roofline tables from results/dryrun/*.json."""
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def load(variant=""):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        r = json.load(open(f))
+        is_opt = f.endswith("__opt.json")
+        if (variant == "opt") != is_opt:
+            continue
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped ({r['reason'][:42]}) | — | — | — |")
+    t = r["roofline"]
+    coll = max(t["collective_s"], t["collective_wire_s"])
+    mem_gib = r["memory_analysis"].get("temp_size_in_bytes", 0) / 2 ** 30
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{t['compute_s'] * 1e3:.0f} | {t['memory_s'] * 1e3:.0f} | "
+            f"{t['collective_s'] * 1e3:.0f} / {t['collective_wire_s'] * 1e3:.0f} | "
+            f"{t['dominant']} | {t['useful_ratio']:.2f} | "
+            f"{t['roofline_fraction']:.2%} | {mem_gib:.1f} |")
+
+
+HEADER = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+          "collective op/wire (ms) | dominant | useful | roofline | "
+          "temp GiB/dev |\n|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    base = load()
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print(HEADER)
+    for (a, s, m), r in sorted(base.items()):
+        if m == "single":
+            print(fmt_row(r))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(HEADER)
+    for (a, s, m), r in sorted(base.items()):
+        if m == "pod2":
+            print(fmt_row(r))
+    opt = load("opt")
+    if opt:
+        print("\n### Optimized variants (§Perf)\n")
+        print(HEADER)
+        for (a, s, m), r in sorted(opt.items()):
+            print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

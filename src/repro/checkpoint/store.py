@@ -1,0 +1,166 @@
+"""Sharded checkpointing with atomic commit, async writes, and elastic
+resharding on restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json        tree structure, shapes, dtypes, step
+            <leaf-id>.npy        one file per leaf (gathered host values)
+         <dir>/LATEST            committed step pointer (atomic rename)
+
+Restore maps every leaf onto the *current* mesh via ``jax.device_put``
+with the caller's shardings — the checkpoint format is mesh-shape
+agnostic, which is what elastic rescaling (growing/shrinking the pod axis)
+requires.  A background thread handles serialization off the training
+loop; commit order (leaves -> manifest -> LATEST) guarantees a torn write
+is never visible.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy cannot save/cast extension dtypes (bfloat16 etc.); store them as
+# same-width unsigned ints and reconstruct from the manifest dtype.
+_EXT_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    name = str(arr.dtype)
+    if name in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[name][1])
+    return arr
+
+
+def _from_saved(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[dtype_name][0])
+    return arr
+
+
+def _flatten_with_ids(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef, [f"leaf_{i:05d}" for i in range(len(leaves))]
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    """Synchronous checkpoint write with atomic commit."""
+    tmp = os.path.join(directory, f".tmp_step_{step}")
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef, ids = _flatten_with_ids(tree)
+    manifest = {"step": step, "leaves": []}
+    for lid, leaf in zip(ids, leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, lid + ".npy"), _to_savable(arr))
+        manifest["leaves"].append(
+            {"id": lid, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    manifest["treedef"] = jax.tree_util.tree_structure(tree).serialize_using_proto().hex() \
+        if hasattr(jax.tree_util.tree_structure(tree), "serialize_using_proto") else None
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(directory, ".LATEST_tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(directory, ".LATEST_tmp"),
+               os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    path = os.path.join(directory, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def restore(directory: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``like``; reshard onto ``shardings``
+    (a matching tree of NamedSharding) when given — works across mesh
+    shapes (elastic)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    dtypes = {m["id"]: m["dtype"] for m in manifest["leaves"]}
+    leaves, treedef, ids = _flatten_with_ids(like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for lid, leaf, sh in zip(ids, leaves, shard_leaves):
+        arr = _from_saved(np.load(os.path.join(d, lid + ".npy")),
+                          dtypes.get(lid, ""))
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+def gc(directory: str, keep: int = 3) -> None:
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(directory)
+        if n.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background writer: ``submit`` returns immediately; ``wait`` joins."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree = item
+            try:
+                save(self.directory, step, host_tree)
+                gc(self.directory, self.keep)
+            except BaseException as e:  # surfaced on next submit/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree: Any) -> None:
+        if self._err:
+            raise self._err
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._q.put((int(step), host_tree))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

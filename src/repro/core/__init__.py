@@ -1,0 +1,21 @@
+"""Core: operational single-server queuing model of data-dependent TPU
+bottlenecks (Dong & Pai 2025, adapted from GPU shared-memory atomics to the
+TPU VMEM scatter/accumulate path) plus the dry-run roofline machinery."""
+
+from repro.core.qmodel import (  # noqa: F401
+    BasicCounters,
+    CoreUtilization,
+    ServiceTimeTable,
+    derive_core_utilization,
+    render_utilization_report,
+)
+from repro.core.timing import CAS, FAO, POPC, V5E, V5E_SCATTER  # noqa: F401
+from repro.core.microbench import build_table, make_pattern  # noqa: F401
+from repro.core.counters import WaveTrace, trace_from_indices  # noqa: F401
+from repro.core.profiler import (  # noqa: F401
+    CacheModel,
+    WorkloadProfile,
+    profile_compiled_step,
+    profile_scatter_workload,
+)
+from repro.core.bottleneck import classify, detect_shifts  # noqa: F401

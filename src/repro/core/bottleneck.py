@@ -1,0 +1,72 @@
+"""Bottleneck classification and shift detection (paper §4.1).
+
+The paper's headline capability: given utilization estimates across a
+sweep (image sizes, batch sizes, router temperatures, ...), say *which
+unit bounds each point* and flag where the bottleneck *shifts* — e.g. the
+histogram moving from the shared-memory atomic unit to global memory at
+~2^20 pixels, "unambiguously represented in our model's results".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.profiler import WorkloadProfile
+
+SATURATED = 0.90   # unit considered saturated (a bottleneck) above this
+UNDERUTILIZED = 0.50
+
+
+@dataclasses.dataclass
+class BottleneckVerdict:
+    label: str
+    bottleneck: str
+    utilization: float
+    saturated: bool
+    comment: str = ""
+
+
+@dataclasses.dataclass
+class ShiftEvent:
+    index: int
+    label_before: str
+    label_after: str
+    unit_before: str
+    unit_after: str
+
+
+def classify(profile: WorkloadProfile) -> BottleneckVerdict:
+    name = profile.bottleneck
+    u = profile.unit(name).utilization if profile.units else 0.0
+    if u >= SATURATED:
+        comment = f"{name} saturated — optimizing other units will not help"
+    elif u <= UNDERUTILIZED:
+        comment = ("no unit saturated — latency/overhead bound "
+                   "(raise concurrency or fuse launches)")
+    else:
+        comment = f"{name} leading but unsaturated"
+    return BottleneckVerdict(label=profile.label, bottleneck=name,
+                             utilization=u, saturated=u >= SATURATED,
+                             comment=comment)
+
+
+def detect_shifts(profiles: Sequence[WorkloadProfile]) -> list[ShiftEvent]:
+    """Find sweep points where the dominant unit changes."""
+    events = []
+    for i in range(1, len(profiles)):
+        a, b = profiles[i - 1], profiles[i]
+        if a.bottleneck != b.bottleneck:
+            events.append(ShiftEvent(
+                index=i, label_before=a.label, label_after=b.label,
+                unit_before=a.bottleneck, unit_after=b.bottleneck))
+    return events
+
+
+def speedup_estimate(before: WorkloadProfile, after: WorkloadProfile) -> float:
+    """Predicted speedup of `after` over `before` from modeled windows."""
+    t0 = float(np.max(before.T_cycles))
+    t1 = float(np.max(after.T_cycles))
+    return t0 / t1 if t1 > 0 else float("inf")

@@ -1,0 +1,3 @@
+"""Pallas kernels: histogram (paper case study), scatter_add (MoE
+dispatch / embedding-grad), flash_attention (online-softmax, VMEM-tiled),
+conflict instrumentation."""

@@ -1,0 +1,1 @@
+from repro.kernels.histogram import ops, ref  # noqa: F401

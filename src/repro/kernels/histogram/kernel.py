@@ -1,0 +1,183 @@
+"""Pallas TPU histogram kernel — the paper's case-study kernel, TPU-native.
+
+GPU original (paper Listings 1-2): each thread reads a pixel's channels and
+``atomicAdd``s into a shared-memory sub-histogram; Listing 2 rotates the
+channel processing order by thread id so same-color neighbours hit
+different sub-histogram banks.
+
+TPU adaptation: there is no atomic unit; the idiomatic TPU histogram keeps
+the (channels x bins) accumulator resident in VMEM across the grid (output
+block with a constant index_map) and commits each tile with a one-hot
+reduction — the VPU serializes duplicate destinations in its commit path,
+which is exactly the unit the queuing model prices.  Two variants:
+
+  * ``hist``   — channels processed in natural order (Listing 1): a
+    solid-color tile drives every lane of a wave into one bin.
+  * ``hist2``  — channel order rotated per lane (Listing 2): a solid-color
+    tile spreads each commit group over ``channels`` distinct bins,
+    cutting the serialization degree by ~channels.
+
+Both produce identical histograms (tests assert vs ``ref.py``); they
+differ in the *conflict structure* of the committed index stream, which
+the instrumented variants measure in-kernel (``instrumentation.py``).
+
+Block layout: image tiles of ``tile`` pixels x C channels stream HBM->VMEM
+via the grid; the (C, num_bins) accumulator stays in VMEM (constant
+index_map) for the whole launch — the scratchpad residency pattern the
+paper's kernels use shared memory for.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import instrumentation as instr
+
+DEFAULT_TILE = 2048
+
+
+def _issue_ordered_bins(tile: jnp.ndarray, num_bins: int, reorder: bool
+                        ) -> jnp.ndarray:
+    """Flat bin ids (T*C,) for a (T, C) tile, in commit/issue order.
+
+    The GPU kernel's warp issues channel step s for all 32 of its pixels
+    together (Listing 1's inner loop), so the committed stream is
+    step-major within each 32-pixel group — that ordering is what the
+    conflict structure (and our wave_degrees instrumentation) sees.  The
+    histogram itself is order-invariant; we commit in the same order for
+    fidelity.  ``reorder`` rotates the channel by lane id (Listing 2).
+    """
+    t, c = tile.shape
+    g = instr.COMMIT_GROUP
+    assert t % g == 0
+    step = jax.lax.broadcasted_iota(jnp.int32, (t, c), 1)
+    if reorder:
+        lane = jax.lax.broadcasted_iota(jnp.int32, (t, c), 0)
+        ch = (step + lane) % c
+        # gather channel `ch[l, s]` of pixel l without dynamic gather
+        # (TPU-friendly): sum of per-channel selects.
+        vals = jnp.zeros((t, c), jnp.int32)
+        for k in range(c):
+            vals = jnp.where(ch == k, tile[:, k:k + 1].astype(jnp.int32), vals)
+    else:
+        ch = step
+        vals = tile.astype(jnp.int32)
+    bins = ch * num_bins + vals                      # (t, c) pixel-major
+    bins = bins.reshape(t // g, g, c).transpose(0, 2, 1)  # step-major
+    return bins.reshape(t * c)
+
+
+def _hist_kernel(img_ref, out_ref, *, num_bins: int, reorder: bool):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = img_ref[...]
+    t, c = tile.shape
+    flat = _issue_ordered_bins(tile, num_bins, reorder)
+    onehot = (flat[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (t * c, c * num_bins), 1))
+    counts = onehot.astype(jnp.int32).sum(axis=0)
+    out_ref[...] += counts.reshape(c, num_bins)
+
+
+def _hist_weighted_kernel(img_ref, w_ref, out_ref, *, num_bins: int,
+                          reorder: bool):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = img_ref[...]
+    t, c = tile.shape
+    flat = _issue_ordered_bins(tile, num_bins, reorder)
+    g = instr.COMMIT_GROUP
+    w = jnp.broadcast_to(w_ref[...][:, None], (t, c))
+    w = w.reshape(t // g, g, c).transpose(0, 2, 1).reshape(t * c)
+    onehot = (flat[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (t * c, c * num_bins), 1))
+    sums = (onehot.astype(jnp.float32) * w[:, None]).sum(axis=0)
+    out_ref[...] += sums.reshape(c, num_bins)
+
+
+def _hist_instrumented_kernel(img_ref, out_ref, deg_ref, *, num_bins: int,
+                              reorder: bool):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = img_ref[...]
+    t, c = tile.shape
+    flat = _issue_ordered_bins(tile, num_bins, reorder)
+    onehot = (flat[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (t * c, c * num_bins), 1))
+    counts = onehot.astype(jnp.int32).sum(axis=0)
+    out_ref[...] += counts.reshape(c, num_bins)
+    deg_ref[...] = instr.wave_degrees(flat)[None, :]
+
+
+def histogram_pallas(
+    img: jnp.ndarray,
+    *,
+    num_bins: int = 256,
+    reorder: bool = False,
+    tile: int = DEFAULT_TILE,
+    weights: jnp.ndarray | None = None,
+    instrumented: bool = False,
+    interpret: bool = True,
+):
+    """Launch the histogram kernel.  img: (N, C) ints, N % tile == 0.
+
+    Returns (C, num_bins) counts — int32, or f32 when ``weights`` given.
+    With ``instrumented=True`` additionally returns per-wave serialization
+    degrees, shape (grid, waves_per_tile).
+    """
+    n, c = img.shape
+    assert n % tile == 0, "pad in ops.py before calling"
+    assert (tile * c) % instr.LANES == 0
+    grid = n // tile
+    waves_per_tile = (tile * c) // instr.LANES
+
+    img_spec = pl.BlockSpec((tile, c), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((c, num_bins), lambda i: (0, 0))
+
+    if weights is not None:
+        kernel = functools.partial(_hist_weighted_kernel, num_bins=num_bins,
+                                   reorder=reorder)
+        return pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=[img_spec, pl.BlockSpec((tile,), lambda i: (i,))],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((c, num_bins), jnp.float32),
+            interpret=interpret,
+        )(img, weights)
+
+    if instrumented:
+        kernel = functools.partial(_hist_instrumented_kernel,
+                                   num_bins=num_bins, reorder=reorder)
+        return pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=[img_spec],
+            out_specs=[out_spec,
+                       pl.BlockSpec((1, waves_per_tile), lambda i: (i, 0))],
+            out_shape=[jax.ShapeDtypeStruct((c, num_bins), jnp.int32),
+                       jax.ShapeDtypeStruct((grid, waves_per_tile),
+                                            jnp.float32)],
+            interpret=interpret,
+        )(img)
+
+    kernel = functools.partial(_hist_kernel, num_bins=num_bins,
+                               reorder=reorder)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[img_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((c, num_bins), jnp.int32),
+        interpret=interpret,
+    )(img)

@@ -1,0 +1,114 @@
+"""Jit'd public wrappers for the histogram kernels + profiler glue.
+
+Instruction-class mapping (paper §2 / §4):
+
+  * unweighted, result-unread  -> POPC class (Ampere's ``ATOMS.POPC.INC``:
+    the compiler's cheap population-count increment; our one-hot popcount
+    reduction is literally that operation),
+  * unweighted, ``force_fao``  -> FAO class (the paper forces ``ATOMS.ADD``
+    back with a dummy read of the atomic's result),
+  * weighted (f32 accumulate)  -> CAS class (FP atomics lower to
+    compare-and-swap loops on the GPU; the read-modify-verify analogue).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counters as counters_mod
+from repro.core import timing
+from repro.kernels import instrumentation as instr
+from repro.kernels.histogram import kernel as hk
+
+
+def _pad(img: jnp.ndarray, tile: int) -> tuple[jnp.ndarray, int]:
+    n = img.shape[0]
+    pad = (-n) % tile
+    if pad:
+        img = jnp.concatenate(
+            [img, jnp.zeros((pad, img.shape[1]), img.dtype)], axis=0)
+    return img, pad
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_bins", "variant", "tile", "interpret"))
+def histogram(img: jnp.ndarray, *, num_bins: int = 256,
+              variant: str = "hist", tile: int = hk.DEFAULT_TILE,
+              interpret: bool = True) -> jnp.ndarray:
+    """(C, num_bins) int32 histogram; `variant` is 'hist' or 'hist2'."""
+    reorder = {"hist": False, "hist2": True}[variant]
+    padded, pad = _pad(img.astype(jnp.int32), tile)
+    out = hk.histogram_pallas(padded, num_bins=num_bins, reorder=reorder,
+                              tile=tile, interpret=interpret)
+    if pad:  # padding pixels are zeros: remove their channel-0-value counts
+        out = out.at[:, 0].add(-pad)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_bins", "variant", "tile", "interpret"))
+def histogram_weighted(img: jnp.ndarray, weights: jnp.ndarray, *,
+                       num_bins: int = 256, variant: str = "hist",
+                       tile: int = hk.DEFAULT_TILE,
+                       interpret: bool = True) -> jnp.ndarray:
+    reorder = {"hist": False, "hist2": True}[variant]
+    padded, pad = _pad(img.astype(jnp.int32), tile)
+    w = jnp.concatenate([weights.astype(jnp.float32),
+                         jnp.zeros((pad,), jnp.float32)]) if pad else weights
+    return hk.histogram_pallas(padded, num_bins=num_bins, reorder=reorder,
+                               tile=tile, weights=w.astype(jnp.float32),
+                               interpret=interpret)
+
+
+def histogram_instrumented(
+    img: jnp.ndarray,
+    *,
+    num_bins: int = 256,
+    variant: str = "hist",
+    tile: int = hk.DEFAULT_TILE,
+    force_fao: bool = False,
+    weighted: bool = False,
+    num_cores: int = 8,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, counters_mod.WaveTrace]:
+    """Histogram + the wave trace its instrumentation emits.
+
+    The committed-index stream is identical for the weighted variant, so
+    the integer instrumented kernel supplies the trace in both cases; only
+    the job class differs (CAS for weighted f32 accumulation).
+    """
+    reorder = {"hist": False, "hist2": True}[variant]
+    padded, pad = _pad(img.astype(jnp.int32), tile)
+    hist, degrees = hk.histogram_pallas(
+        padded, num_bins=num_bins, reorder=reorder, tile=tile,
+        instrumented=True, interpret=interpret)
+    if pad:
+        hist = hist.at[:, 0].add(-pad)
+    deg = np.asarray(degrees).reshape(-1)
+    num_waves = deg.shape[0]
+    waves_per_tile = (tile * img.shape[1]) // instr.LANES
+    tiles = np.arange(num_waves) // waves_per_tile
+    if weighted:
+        job_class = timing.CAS
+    elif force_fao:
+        job_class = timing.FAO
+    else:
+        job_class = timing.POPC
+    trace = counters_mod.WaveTrace(
+        degree=deg,
+        job_class=np.full(num_waves, job_class, np.int32),
+        core=(tiles % num_cores).astype(np.int32),
+        lanes_active=np.full(num_waves, float(instr.LANES)),
+        waves_per_tile=waves_per_tile,
+    )
+    return hist, trace
+
+
+def image_bytes(img: jnp.ndarray) -> float:
+    """HBM read traffic of the launch: 1 byte/channel as in the paper."""
+    return float(img.shape[0] * img.shape[1])

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the histogram kernels (paper §4 case study)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def histogram_ref(img: jnp.ndarray, num_bins: int = 256) -> jnp.ndarray:
+    """Per-channel histogram of an image.
+
+    img: (num_pixels, channels) integer channel values in [0, num_bins).
+    returns: (channels, num_bins) int32 counts.
+    """
+    n, c = img.shape
+    flat = img.astype(jnp.int32).T  # (C, N)
+    onehot = flat[:, :, None] == jnp.arange(num_bins, dtype=jnp.int32)
+    return onehot.sum(axis=1).astype(jnp.int32)
+
+
+def histogram_weighted_ref(img: jnp.ndarray, weights: jnp.ndarray,
+                           num_bins: int = 256) -> jnp.ndarray:
+    """Weighted per-channel histogram (f32 accumulate — the CAS-class path).
+
+    weights: (num_pixels,) float32, applied to every channel's bin update.
+    returns: (channels, num_bins) float32 sums.
+    """
+    n, c = img.shape
+    flat = img.astype(jnp.int32).T  # (C, N)
+    onehot = (flat[:, :, None] == jnp.arange(num_bins, dtype=jnp.int32))
+    return (onehot * weights[None, :, None]).sum(axis=1).astype(jnp.float32)

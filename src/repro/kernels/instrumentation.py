@@ -1,0 +1,46 @@
+"""In-kernel conflict instrumentation shared by the Pallas scatter kernels.
+
+This is the counter source the paper wishes hardware provided (§4: "No GPU
+performance counter directly measures n and we recommend GPU manufacturers
+add one").  The instrumented kernel variants compute, *inside the kernel
+body* and from the same index stream the scatter path commits:
+
+  * per-wave serialization degree (the replay-count analogue feeding the
+    paper's ``O`` counter: ``e = O / N``),
+
+matching ``repro.core.counters.wave_degree`` bit-for-bit (cross-validated
+by tests).  Instrumentation mirrors NCU's replay counters: it adds
+overhead when enabled and is compiled out of production kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANES = 1024        # one wave = 8 x 128 VPU lane group
+COMMIT_GROUP = 32   # lanes retiring together; conflicts serialize within
+
+
+def wave_degrees(flat_idx: jnp.ndarray, lanes: int = LANES,
+                 group: int = COMMIT_GROUP) -> jnp.ndarray:
+    """Per-wave serialization degree of a flat index stream.
+
+    ``flat_idx`` length must be a multiple of ``lanes``.  Returns
+    ``(len // lanes,)`` float32 degrees: mean over commit groups of the max
+    duplicate multiplicity within the group.  Static shapes only — safe
+    inside a Pallas kernel body.
+    """
+    assert flat_idx.size % lanes == 0 and lanes % group == 0
+    g = flat_idx.reshape(-1, group)
+    eq = (g[:, :, None] == g[:, None, :]).astype(jnp.int32)
+    mult = eq.sum(axis=2).max(axis=1)                    # (num_groups,)
+    per_wave = mult.reshape(-1, lanes // group)
+    return per_wave.astype(jnp.float32).mean(axis=1)     # (num_waves,)
+
+
+def wave_active(flat_idx: jnp.ndarray, valid: jnp.ndarray,
+                lanes: int = LANES) -> jnp.ndarray:
+    """Active lanes per wave given a validity mask (padding lanes off)."""
+    assert flat_idx.size % lanes == 0
+    v = valid.reshape(-1, lanes).astype(jnp.float32)
+    return v.sum(axis=1)

@@ -1,0 +1,1 @@
+from repro.kernels.scatter_add import ops, ref  # noqa: F401

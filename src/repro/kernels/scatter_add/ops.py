@@ -1,0 +1,111 @@
+"""Jit'd public wrappers for scatter-add / bincount + instrumentation glue."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counters as counters_mod
+from repro.core import timing
+from repro.kernels import instrumentation as instr
+from repro.kernels.scatter_add import kernel as sk
+
+
+def _pad_n(ids: jnp.ndarray, values: jnp.ndarray, tile: int):
+    n = ids.shape[0]
+    pad = (-n) % tile
+    if pad:
+        ids = jnp.concatenate([ids, jnp.zeros((pad,), ids.dtype)])
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad,) + values.shape[1:], values.dtype)])
+    return ids, values, pad
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_segments", "tile", "seg_block", "interpret"))
+def scatter_add(values: jnp.ndarray, ids: jnp.ndarray, *, num_segments: int,
+                tile: int = sk.DEFAULT_TILE,
+                seg_block: int = sk.DEFAULT_SEG_BLOCK,
+                interpret: bool = True) -> jnp.ndarray:
+    """Segment-sum: (N, D) values + (N,) ids -> (num_segments, D) f32.
+
+    Padding rows carry zero values, so their (id 0) contribution is zero.
+    """
+    ids, values, _ = _pad_n(ids.astype(jnp.int32), values, tile)
+    return sk.scatter_add_pallas(values, ids, num_segments, tile=tile,
+                                 seg_block=seg_block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_segments", "tile", "interpret"))
+def bincount(ids: jnp.ndarray, *, num_segments: int,
+             tile: int = sk.DEFAULT_TILE,
+             interpret: bool = True) -> jnp.ndarray:
+    """(num_segments,) int32 counts (the MoE dispatch histogram)."""
+    n = ids.shape[0]
+    ids_p, _, pad = _pad_n(ids.astype(jnp.int32),
+                           jnp.zeros((n, 1), jnp.float32), tile)
+    out = sk.bincount_pallas(ids_p, num_segments, tile=tile,
+                             interpret=interpret)
+    if pad:  # padding ids are 0: remove their counts
+        out = out.at[0].add(-pad)
+    return out
+
+
+def instrumented_scatter_add(
+    ids,
+    values,
+    num_segments: int,
+    *,
+    wave: int = instr.LANES,
+    tile: int = sk.DEFAULT_TILE,
+    num_cores: int = 8,
+    job_class: int = timing.FAO,
+    interpret: bool = True,
+):
+    """Scatter-add + the paper-Table-1 counters its instrumentation emits.
+
+    Returns (out, counters) where counters has the basic quantities
+    ``N`` (wave jobs), ``O`` (serialization transactions), per-wave
+    ``degree``, and a ready-to-profile ``trace``.
+    """
+    del wave  # fixed at instr.LANES inside the kernel
+    ids = jnp.asarray(ids).astype(jnp.int32).reshape(-1)
+    values = jnp.asarray(values, jnp.float32)
+    if values.ndim == 1:
+        values = values[:, None]
+    # Pad with *unique out-of-range* sentinel ids: they match no segment
+    # block (contributing nothing) and add no artificial conflicts to the
+    # instrumented degree counters.
+    n = ids.shape[0]
+    pad = (-n) % tile
+    if pad:
+        seg_blocks = -(-num_segments // min(sk.DEFAULT_SEG_BLOCK, num_segments))
+        base = seg_blocks * min(sk.DEFAULT_SEG_BLOCK, num_segments)
+        sentinel = base + jnp.arange(pad, dtype=jnp.int32)
+        ids = jnp.concatenate([ids, sentinel])
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad,) + values.shape[1:], values.dtype)])
+    out, deg = sk.scatter_add_pallas(values, ids, num_segments, tile=tile,
+                                     instrumented=True, interpret=interpret)
+    deg = np.asarray(deg).reshape(-1)
+    num_waves = deg.shape[0]
+    waves_per_tile = tile // instr.LANES
+    tiles = np.arange(num_waves) // waves_per_tile
+    trace = counters_mod.WaveTrace(
+        degree=deg,
+        job_class=np.full(num_waves, job_class, np.int32),
+        core=(tiles % num_cores).astype(np.int32),
+        lanes_active=np.full(num_waves, float(instr.LANES)),
+        waves_per_tile=waves_per_tile,
+    )
+    counters = {
+        "N": float(num_waves),
+        "O": float(deg.sum()),
+        "degree": deg,
+        "trace": trace,
+    }
+    return out, counters

@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the scatter-add / segment-sum / bincount kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scatter_add_ref(values: jnp.ndarray, ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """(N, D) values summed into (num_segments, D) by ids (N,)."""
+    out = jnp.zeros((num_segments, values.shape[-1]), jnp.float32)
+    return out.at[ids].add(values.astype(jnp.float32))
+
+
+def bincount_ref(ids: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+    """(num_segments,) int32 occurrence counts."""
+    return jnp.bincount(ids, length=num_segments).astype(jnp.int32)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (spec §MULTI-POD DRY-RUN).
+
+For every (architecture x input shape) cell, on the single-pod 16x16 mesh
+and the 2x16x16 multi-pod mesh: build the jitted step (train / prefill /
+decode per shape kind), ``.lower().compile()`` against ShapeDtypeStruct
+inputs, print ``memory_analysis()`` / ``cost_analysis()``, parse the
+collective traffic from the compiled HLO, and emit the roofline terms to
+``results/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.core import hlo as hlo_mod
+from repro.core import roofline
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import data_axes_of, make_production_mesh, mesh_chips
+from repro.models.registry import build_model
+from repro.optim import adamw
+from repro.parallel import ctx as pctx
+from repro.serve import step as serve_mod
+from repro.train import step as train_mod
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb variants: per (arch, shape) config overrides, applied on
+# top of the baseline.  Keys match EXPERIMENTS.md §Perf iteration ids.
+# ---------------------------------------------------------------------------
+OPTIMIZATIONS: dict[tuple[str, str], dict] = {
+    ("command-r-plus-104b", "train_4k"): dict(
+        attn_tp_expand=True, train_constrain_grad_sharding=True,
+        attn_bf16_score_grad=True),
+    ("gemma2-27b", "train_4k"): dict(
+        attn_tp_expand=True, train_constrain_grad_sharding=True,
+        attn_bf16_score_grad=True),
+    ("qwen3-moe-235b-a22b", "train_4k"): dict(
+        attn_tp_expand=True, train_constrain_grad_sharding=True,
+        moe_bf16_combine=True),
+}
+
+
+def shape_tuned_config(cfg, shape, variant: str = "base"):
+    """Per-shape impl knobs (documented in EXPERIMENTS.md §Dry-run)."""
+    kw = {}
+    if shape.kind == "prefill" and shape.seq_len >= 32768 \
+            and not cfg.rwkv and cfg.family != "ssm":
+        kw["attn_impl"] = "blockwise"
+        kw["kv_block"] = 1024
+    if cfg.vocab_size >= 100_000 and shape.kind == "train":
+        kw["loss_chunk"] = 455  # divides 4095; keeps f32 logits ~0.5 GiB/dev
+    if variant == "opt":
+        kw.update(OPTIMIZATIONS.get((cfg.name, shape.name), {}))
+    loss_chunk = kw.pop("loss_chunk", 0)
+    train_kw = {k[len("train_"):]: kw.pop(k) for k in list(kw)
+                if k.startswith("train_")}
+    return dataclasses.replace(cfg, **kw) if kw else cfg, loss_chunk, train_kw
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "base"):
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg0, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "pod2" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    cfg, loss_chunk, train_kw = shape_tuned_config(cfg0, shape, variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    daxes = data_axes_of(mesh)
+    model = build_model(cfg)
+    mesh_name = "pod2" if multi_pod else "single"
+    tokens_per_step = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1)
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * tokens_per_step
+    else:
+        model_flops = 2.0 * n_active * tokens_per_step
+
+    t0 = time.time()
+    with pctx.use_mesh(mesh, data_axes=daxes, tp_axis="model"):
+        if shape.kind == "train":
+            num_data = 1
+            for a in daxes:
+                num_data *= mesh.shape[a]
+            accum = max(1, shape.global_batch // num_data)
+            tcfg = train_mod.TrainConfig(accum_steps=accum,
+                                         loss_chunk=loss_chunk, **train_kw)
+            ocfg = adamw.AdamWConfig()
+            step_fn = train_mod.make_train_step(model, tcfg, ocfg)
+            state_sds, state_sh = specs_mod.state_specs(model, mesh)
+            batch = specs_mod.train_batch_specs(cfg, shape, mesh)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh,
+                              jax.tree.map(lambda s: s.sharding, batch)),
+                donate_argnums=(0,),
+            ).lower(state_sds, batch)
+        elif shape.kind == "prefill":
+            scfg = serve_mod.ServeConfig(max_len=shape.seq_len)
+            prefill = serve_mod.make_prefill(model, scfg)
+            params_sds, params_sh = specs_mod.param_specs(model, mesh)
+            inputs = specs_mod.prefill_specs(cfg, shape, mesh)
+            tokens = inputs.pop("tokens")
+            extras = inputs or None
+            lowered = jax.jit(
+                prefill, in_shardings=(params_sh, tokens.sharding, None),
+                static_argnums=(),
+            ).lower(params_sds, tokens, extras)
+        else:  # decode
+            decode = serve_mod.make_decode_step(model)
+            params_sds, params_sh = specs_mod.param_specs(model, mesh)
+            cache_sds, cache_sh, tokens, pos = specs_mod.decode_specs(
+                cfg, shape, model, mesh, params_sds)
+            lowered = jax.jit(
+                decode,
+                in_shardings=(params_sh, cache_sh, tokens.sharding,
+                              pos.sharding),
+                donate_argnums=(1,),
+            ).lower(params_sds, cache_sds, tokens, pos)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = hlo_mod.memory_analysis_dict(compiled)
+    cost = hlo_mod.cost_analysis_dict(compiled)
+    terms = roofline.from_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=chips, model_flops=model_flops)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips,
+        "compile_seconds": round(compile_s, 1),
+        "params": n_params, "active_params": n_active,
+        "tokens_per_step": tokens_per_step,
+        "memory_analysis": mem,
+        "cost_flops": cost.get("flops"),
+        "cost_bytes": cost.get("bytes accessed"),
+        "roofline": terms.as_dict(),
+    }
+    return rec
+
+
+def cell_path(arch, shape_name, mesh_name, variant="base"):
+    safe = arch.replace("/", "_")
+    suffix = "" if variant == "base" else f"__{variant}"
+    return os.path.join(RESULTS_DIR,
+                        f"{safe}__{shape_name}__{mesh_name}{suffix}.json")
+
+
+def run_and_save(arch, shape_name, multi_pod, force=False,
+                 variant="base") -> dict:
+    mesh_name = "pod2" if multi_pod else "single"
+    path = cell_path(arch, shape_name, mesh_name, variant)
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("status") in ("ok", "skipped"):
+            return cached  # only errors are retried
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod, variant)
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()[-4000:]}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" dominant={r['dominant']} useful={r['useful_ratio']:.2f}"
+                 f" compile={rec['compile_seconds']}s")
+    elif status == "error":
+        extra = " " + rec["error"][:120]
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ({variant}): "
+          f"{status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "pod2", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "pod2": [True], "both": [False, True]}[
+        args.mesh]
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    n_bad = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_and_save(arch, shape_name, mp, force=args.force,
+                                   variant=args.variant)
+                n_bad += rec["status"] == "error"
+    print(f"[dryrun] done; {n_bad} errors")
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""ShapeDtypeStruct stand-ins for every model input (spec §dry-run step 2).
+
+Weak-type-correct, shardable, no device allocation.  ``input_specs``
+returns the batch for a training step or the (cache, tokens, pos) set for
+a serving step, with NamedShardings attached for the given mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import data_axes_of
+from repro.parallel import sharding as shd
+
+
+def _batch_axes(mesh, batch_size: int) -> Optional[tuple[str, ...]]:
+    """Data axes if the batch divides across them, else replicate."""
+    axes = data_axes_of(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return axes if batch_size % n == 0 and batch_size >= n else None
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    axes = _batch_axes(mesh, b)
+    bspec = P(axes) if axes else P()
+
+    def sds(shp, dt, spec):
+        return jax.ShapeDtypeStruct(shp, dt,
+                                    sharding=NamedSharding(mesh, spec))
+
+    batch = {
+        "tokens": sds((b, s), jnp.int32, P(axes)),
+        "labels": sds((b, s), jnp.int32, P(axes)),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = sds((b, cfg.encoder_frames, cfg.d_model),
+                              jnp.dtype(cfg.dtype), P(axes, None, None))
+    if cfg.family == "vlm":
+        batch["image_embeds"] = sds((b, cfg.image_tokens, cfg.d_model),
+                                    jnp.dtype(cfg.dtype), P(axes, None, None))
+    del bspec
+    return batch
+
+
+def param_specs(model, mesh, rng=None) -> tuple:
+    """(ShapeDtypeStruct tree with shardings, sharding tree)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(model.init, rng)
+    shardings = shd.param_shardings(shapes, model.cfg, mesh)
+    with_sh = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+    return with_sh, shardings
+
+
+def state_specs(model, mesh, ocfg=None) -> tuple:
+    """Full train state (params + AdamW state) specs/shardings."""
+    from repro.train import step as train_step_mod
+    rng = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(
+        lambda r: train_step_mod.init_state(model, r), rng)
+    pspecs = shd.param_pspecs(shapes["params"], model.cfg)
+    state_pspecs = {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs, "master": pspecs, "count": P()},
+        "step": P(),
+    }
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), state_pspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+    with_sh = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+    return with_sh, shardings
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model, mesh,
+                 params_sds) -> tuple:
+    """(cache SDS tree, cache shardings, tokens SDS, pos SDS)."""
+    b = shape.global_batch
+    axes = _batch_axes(mesh, b)
+    extras = {}
+    if cfg.family == "audio":
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(axes, None, None)))
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.image_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(axes, None, None)))
+
+    def cache_shape_fn(params, **ex):
+        if cfg.family == "audio":
+            return model.init_cache(params, b, shape.seq_len,
+                                    frames=ex["frames"])
+        if cfg.family == "vlm":
+            return model.init_cache(params, b, shape.seq_len,
+                                    image_embeds=ex["image_embeds"])
+        return model.init_cache(params, b, shape.seq_len)
+
+    cache_shapes = jax.eval_shape(cache_shape_fn, params_sds, **extras)
+    cache_pspecs = shd.cache_pspecs(cache_shapes, cfg, data_axes=axes,
+                                    seq_axis="model")
+    cache_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), cache_pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    cache_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_shapes, cache_sh)
+    tokens = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32, sharding=NamedSharding(mesh, P(axes, None)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return cache_sds, cache_sh, tokens, pos
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    axes = _batch_axes(mesh, b)
+    out = {"tokens": jax.ShapeDtypeStruct(
+        (b, s), jnp.int32, sharding=NamedSharding(mesh, P(axes, None)))}
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(axes, None, None)))
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.image_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(axes, None, None)))
+    return out

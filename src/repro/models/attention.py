@@ -1,0 +1,259 @@
+"""Grouped-query attention with every variant the assigned archs need.
+
+Flags: QKV bias (qwen), attention-logit softcap (gemma2), sliding window
+(gemma2 local layers / zamba2 long-context), cross-attention
+(whisper/llama-vision), bidirectional (whisper encoder), KV-cache decode,
+and a blockwise (flash-style, online-softmax) path for long prefill.
+
+Shape conventions: activations (B, T, d); Q heads H, KV heads KV with
+H % KV == 0; per-head dim ``head_dim``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel import ctx as pctx
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    logit_softcap: Optional[float] = None
+    window: Optional[int] = None        # sliding-window size (None = full)
+    causal: bool = True
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    dtype: str = "bfloat16"
+    # Megatron-style GQA TP: replicate KV heads across the query groups so
+    # every attention tensor carries the full H dim and shards over the
+    # model axis (H % tp == 0 even when KV heads < tp).  §Perf lever: keeps
+    # the (Tq, Tk) scores TP-sharded instead of replicated.
+    tp_expand_heads: bool = False
+    # §Perf lever P9: round-trip the scores through bf16 right after the
+    # f32-accumulated QK^T.  Forward accumulation stays f32 (MXU); the
+    # convert boundary makes the softmax-backward cotangents re-enter the
+    # projection transposes in bf16, halving the dx TP all-reduce wire.
+    bf16_score_grad: bool = False
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+
+def init(key, cfg: AttnConfig) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": layers.dense_init(kq, cfg.d_model, cfg.q_dim, dt, cfg.qkv_bias),
+        "wk": layers.dense_init(kk, cfg.d_model, cfg.kv_dim, dt, cfg.qkv_bias),
+        "wv": layers.dense_init(kv, cfg.d_model, cfg.kv_dim, dt, cfg.qkv_bias),
+        "wo": layers.dense_init(ko, cfg.q_dim, cfg.d_model, dt, False),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n: int, hd: int) -> jnp.ndarray:
+    b, t, _ = x.shape
+    return x.reshape(b, t, n, hd).transpose(0, 2, 1, 3)  # (B, n, T, hd)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, n, t, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, n * hd)
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: Optional[int], kv_len: Optional[jnp.ndarray] = None
+               ) -> jnp.ndarray:
+    """(Tq, Tk) additive mask from absolute positions."""
+    ok = k_pos[None, :] >= 0  # ring-buffer slots never written are < 0
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        ok &= k_pos[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, bias, softcap_val, scale, bf16_grad=False):
+    """q (B,KV,G,Tq,hd), k/v (B,KV,Tk,hd), bias (Tq,Tk)."""
+    scores = jnp.einsum("bkgqh,bkth->bkgqt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if bf16_grad:
+        scores = scores.astype(jnp.bfloat16).astype(jnp.float32)
+    scores = layers.softcap(scores, softcap_val)
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,bkth->bkgqh", probs.astype(v.dtype), v)
+    return out
+
+
+def _sdpa_blockwise(q, k, v, q_pos, k_pos, causal, window, softcap_val,
+                    scale, kv_block: int, kv_len=None):
+    """Online-softmax attention, scanning KV blocks (flash-style, pure jnp).
+
+    Keeps peak memory at (B,KV,G,Tq,kv_block) instead of (...,Tk): the
+    long-prefill path.  Accumulates in f32.
+    """
+    b, kv_h, g, tq, hd = q.shape
+    tk = k.shape[2]
+    assert tk % kv_block == 0
+    nblk = tk // kv_block
+
+    def step(carry, blk):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, blk * kv_block, kv_block, 2)
+        vs = jax.lax.dynamic_slice_in_dim(v, blk * kv_block, kv_block, 2)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, blk * kv_block, kv_block, 0)
+        s = jnp.einsum("bkgqh,bkth->bkgqt", q, ks,
+                       preferred_element_type=jnp.float32) * scale
+        s = layers.softcap(s, softcap_val)
+        s = s + _mask_bias(q_pos, kp, causal, window, kv_len)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqt,bkth->bkgqh", p.astype(vs.dtype), vs).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, kv_h, g, tq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kv_h, g, tq), jnp.float32),
+            jnp.zeros((b, kv_h, g, tq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(nblk))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def _sdpa_blockwise_2d(q, k, v, q_pos, k_pos, causal, window, softcap_val,
+                       scale, q_block: int, kv_block: int, kv_len=None):
+    """Flash-style attention chunked over BOTH q and kv blocks.
+
+    Peak live memory per step: (B,KV,G,q_block,kv_block) — independent of
+    sequence length on both axes.  This is the long-prefill / train path
+    (§Perf hillclimb: removes the (Tq,Tk) f32 score materialization)."""
+    b, kv_h, g, tq, hd = q.shape
+    assert tq % q_block == 0
+    nq = tq // q_block
+
+    def one_q(i):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * q_block, q_block, 3)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * q_block, q_block, 0)
+        return _sdpa_blockwise(qc, k, v, qp, k_pos, causal, window,
+                               softcap_val, scale, kv_block, kv_len)
+
+    out = jax.lax.map(one_q, jnp.arange(nq))       # (nq,B,KV,G,qb,hd)
+    return jnp.moveaxis(out, 0, 3).reshape(b, kv_h, g, tq, hd)
+
+
+def attend(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: AttnConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    kv_x: Optional[jnp.ndarray] = None,      # cross-attention source
+    kv_positions: Optional[jnp.ndarray] = None,
+    cache: Optional[dict] = None,            # decode: {"k","v","pos"}
+    kv_block: Optional[int] = None,          # blockwise path when set
+    q_block: Optional[int] = None,           # + q-chunking (flash) when set
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """Returns (output (B,T,d), updated cache or None)."""
+    b, t, _ = x.shape
+    g = cfg.num_heads // cfg.num_kv_heads
+    scale = cfg.head_dim ** -0.5
+
+    q = _split_heads(pctx.shard_batch_tp(layers.dense(params["wq"], x)),
+                     cfg.num_heads, cfg.head_dim)
+    src = x if kv_x is None else kv_x
+    k = _split_heads(pctx.shard_batch_tp(layers.dense(params["wk"], src)),
+                     cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(pctx.shard_batch_tp(layers.dense(params["wv"], src)),
+                     cfg.num_kv_heads, cfg.head_dim)
+
+    if positions is None:
+        positions = jnp.arange(t)
+    if kv_positions is None:
+        kv_positions = positions if kv_x is None else jnp.arange(src.shape[1])
+
+    if cfg.use_rope and kv_x is None:
+        qc, qs = layers.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q = layers.apply_rope(q, qc, qs)
+        kc, ks_ = layers.rope_angles(kv_positions, cfg.head_dim, cfg.rope_theta)
+        k = layers.apply_rope(k, kc, ks_)
+
+    new_cache = None
+    kv_len = None
+    if cache is not None:
+        # Decode: write new K/V into the cache ring and attend over the
+        # buffer with a validity mask.  The buffer may be smaller than the
+        # sequence (sliding-window cache): slot = pos % buf, and each
+        # slot's *absolute* position is recovered for masking — unwritten
+        # slots get negative positions and are masked out.  K was RoPE'd
+        # with absolute positions before the write, so eviction is free.
+        pos = cache["pos"]
+        buf = cache["k"].shape[2]
+        slot = pos % buf
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 2)
+        k, v = ck, cv
+        slots = jnp.arange(buf)
+        last_write = pos + t - 1
+        kv_positions = last_write - ((last_write - slots) % buf)
+        kv_len = pos + t
+        new_cache = {"k": ck, "v": cv, "pos": pos + t}
+
+    if cfg.tp_expand_heads and g > 1:
+        k = jnp.repeat(k, g, axis=1)        # (B, H, Tk, hd)
+        v = jnp.repeat(v, g, axis=1)
+        q = pctx.shard_heads(q)
+        k = pctx.shard_heads(k)
+        v = pctx.shard_heads(v)
+        qg = q.reshape(b, cfg.num_heads, 1, q.shape[2], cfg.head_dim)
+    else:
+        q = pctx.shard_heads(q)
+        qg = q.reshape(b, cfg.num_kv_heads, g, q.shape[2], cfg.head_dim)
+    causal = cfg.causal and kv_x is None
+    if kv_block is not None and q_block is not None \
+            and qg.shape[3] % q_block == 0 and qg.shape[3] > q_block:
+        out = _sdpa_blockwise_2d(qg, k, v, positions, kv_positions, causal,
+                                 cfg.window, cfg.logit_softcap, scale,
+                                 q_block, kv_block, kv_len)
+    elif kv_block is not None:
+        out = _sdpa_blockwise(qg, k, v, positions, kv_positions, causal,
+                              cfg.window, cfg.logit_softcap, scale, kv_block,
+                              kv_len)
+    else:
+        bias = _mask_bias(positions, kv_positions, causal, cfg.window, kv_len)
+        out = _sdpa(qg, k, v, bias, cfg.logit_softcap, scale,
+                    bf16_grad=cfg.bf16_score_grad)
+    out = out.astype(x.dtype).reshape(b, cfg.num_heads, q.shape[2],
+                                      cfg.head_dim)
+    merged = pctx.shard_batch_tp(_merge_heads(out))
+    return layers.dense(params["wo"], merged), new_cache
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode KV cache buffers.  For windowed layers the buffer is the
+    window size (sliding-window cache) — the long_500k enabler."""
+    buf = max_len if cfg.window is None else min(max_len, cfg.window)
+    shape = (batch, cfg.num_kv_heads, buf, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.array(0, jnp.int32)}

@@ -1,0 +1,126 @@
+"""Shared model building blocks: norms, embeddings, RoPE, losses.
+
+Pure functions over parameter pytrees (dicts).  Initialization functions
+return shape/dtype-matched pytrees; every layer is scan-stackable (params
+may carry a leading layer axis added by the caller).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init (matches common LM init schemes)."""
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+               bias: bool = False) -> dict:
+    w = truncated_normal_init(key, (d_in, d_out), d_in ** -0.5, dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return h.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    # d**-0.5 keeps tied-unembedding logits O(1) at init.
+    return {"table": truncated_normal_init(key, (vocab, d), d ** -0.5, dtype)}
+
+
+def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding: (..., d) @ (V, d)^T -> (..., V)."""
+    return x @ p["table"].T
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping."""
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# -- rotary position embeddings --------------------------------------------
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float = 10000.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given positions; (..., head_dim/2)."""
+    half = head_dim // 2
+    freq = theta ** (-np.arange(0, half) * 2.0 / head_dim)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (..., T, head_dim); cos/sin: (T, head_dim/2) broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(num: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings, (num, d) f32."""
+    half = d // 2
+    freq = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    pos = np.arange(num)[:, None] * freq[None, :]
+    return jnp.asarray(np.concatenate([np.sin(pos), np.cos(pos)], axis=1),
+                       jnp.float32)
+
+
+# -- losses ------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean cross-entropy; logits (..., V) any dtype, computed in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,186 @@
+"""Mamba-2 block (SSD, arXiv:2405.21060) — used by zamba2's backbone.
+
+Selective state-space with scalar-per-head decay, evaluated with the
+chunked state-space-duality algorithm: intra-chunk quadratic (matmul) term
++ inter-chunk state recurrence (scan over chunks).  Decode carries the
+(H, P, N) state and a small causal-conv ring — O(1) in sequence length,
+which is what makes zamba2 a long_500k arch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel import ctx as pctx
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    state_dim: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64
+    dtype: str = "bfloat16"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.state_dim
+
+
+def init(key, cfg: Mamba2Config) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.state_dim + cfg.num_heads
+    return {
+        "in_proj": layers.dense_init(ks[0], cfg.d_model, d_in_proj, dt),
+        "conv_w": layers.truncated_normal_init(
+            ks[1], (cfg.conv_width, cfg.conv_dim), 0.3, dt),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dt),
+        "a_log": jnp.zeros((cfg.num_heads,), jnp.float32),   # A = -exp(a_log)
+        "dt_bias": jnp.zeros((cfg.num_heads,), jnp.float32),
+        "d_skip": jnp.ones((cfg.num_heads,), jnp.float32),
+        "norm": layers.rmsnorm_init(cfg.d_inner, dt),
+        "out_proj": layers.dense_init(ks[2], cfg.d_inner, cfg.d_model, dt),
+    }
+
+
+def _split_proj(proj: jnp.ndarray, cfg: Mamba2Config):
+    zi = cfg.d_inner
+    xi = zi + cfg.d_inner
+    bi = xi + cfg.state_dim
+    ci = bi + cfg.state_dim
+    return (proj[..., :zi], proj[..., zi:xi], proj[..., xi:bi],
+            proj[..., bi:ci], proj[..., ci:])
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv via shifted adds; x (B,T,C), w (W,C)."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.roll(x, i, axis=1)
+        if init_state is None:
+            shifted = shifted.at[:, :i].set(0.0)
+        else:
+            shifted = shifted.at[:, :i].set(init_state[:, width - 1 - i:
+                                                       width - 1 - i + i])
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int):
+    """SSD: x (B,T,H,P), dt (B,T,H) f32, a (H,) f32 (negative),
+    b/c (B,T,N).  Returns y (B,T,H,P) f32 and final state (B,H,P,N)."""
+    bsz, t0, h, p = x.shape
+    n = b_mat.shape[-1]
+    pad = (-t0) % chunk
+    if pad:  # zero x/dt rows contribute nothing; dt=0 means decay exp(0)=1
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    t = t0 + pad
+    nc = t // chunk
+    da = (dt * a).reshape(bsz, nc, chunk, h)             # log decay per step
+    xdt = (x.astype(jnp.float32) * dt[..., None]).reshape(
+        bsz, nc, chunk, h, p)
+    bs = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cs = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cum = jnp.cumsum(da, axis=2)                         # inclusive
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) (c_i.b_j) dtx_j
+    decay_i = jnp.exp(cum)                               # (b,c,l,h)
+    decay_j = jnp.exp(-cum)
+    scores = jnp.einsum("bcln,bcmn->bclm", cs, bs)       # (b,c,l,m)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    pair = scores[:, :, None] * (decay_i.transpose(0, 1, 3, 2)[..., None]
+                                 * decay_j.transpose(0, 1, 3, 2)[:, :, :, None]
+                                 * tri[None, None, None])
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", pair, xdt)
+    # chunk summary state: S_c = sum_j exp(cum_L - cum_j) dtx_j b_j^T
+    w_total = cum[:, :, -1]                              # (b,c,h)
+    k_tail = jnp.exp(w_total[:, :, None] - cum)          # (b,c,l,h)
+    s_chunk = jnp.einsum("bclh,bclhp,bcln->bchpn", k_tail, xdt, bs)
+
+    def step(hprev, inp):
+        wt, sc = inp
+        return jnp.exp(wt)[..., None, None] * hprev + sc, hprev
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        step, s0, (w_total.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                 # (b,c,h,p,n)
+    y_inter = jnp.einsum("bclh,bcln,bchpn->bclhp", decay_i, cs, h_in)
+    y = (y_intra + y_inter).reshape(bsz, t, h, p)
+    return y[:, :t0], h_last
+
+
+def apply(p: dict, x: jnp.ndarray, cfg: Mamba2Config) -> jnp.ndarray:
+    bsz, t, _ = x.shape
+    proj = layers.dense(p["in_proj"], x)
+    z, xin, b_mat, c_mat, dt_raw = _split_proj(proj, cfg)
+    z, xin = pctx.shard_batch_tp(z), pctx.shard_batch_tp(xin)
+    xbc = jnp.concatenate([xin, b_mat, c_mat], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :cfg.d_inner]
+    b_mat = xbc[..., cfg.d_inner:cfg.d_inner + cfg.state_dim]
+    c_mat = xbc[..., cfg.d_inner + cfg.state_dim:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(bsz, t, cfg.num_heads, cfg.head_dim)
+    y, _ = _ssd_chunked(xh, dt, a, b_mat, c_mat, cfg.chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, t, cfg.d_inner).astype(x.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return layers.dense(p["out_proj"], y)
+
+
+def decode_step(p: dict, x: jnp.ndarray, state: dict, cfg: Mamba2Config):
+    """x (B,1,d); state {"h": (B,H,P,N) f32, "conv": (B,W-1,conv_dim)}."""
+    bsz = x.shape[0]
+    proj = layers.dense(p["in_proj"], x)[:, 0]
+    z, xin, b_mat, c_mat, dt_raw = _split_proj(proj, cfg)
+    xbc = jnp.concatenate([xin, b_mat, c_mat], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32)) + p["conv_b"])
+    conv_out = conv_out.astype(x.dtype)
+    xin = conv_out[..., :cfg.d_inner]
+    b_mat = conv_out[..., cfg.d_inner:cfg.d_inner + cfg.state_dim]
+    c_mat = conv_out[..., cfg.d_inner + cfg.state_dim:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(bsz, cfg.num_heads, cfg.head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * a)                               # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], b_mat.astype(jnp.float32))
+    h_new = decay[..., None, None] * state["h"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_mat.astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z[:, None]))
+    out = layers.dense(p["out_proj"], y)
+    return out, {"h": h_new, "conv": window[:, 1:]}
+
+
+def init_state(cfg: Mamba2Config, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.state_dim),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim),
+                          jnp.bfloat16),
+    }

@@ -1,0 +1,30 @@
+"""Gated MLP (SwiGLU/GeGLU) — the dense FFN used by every assigned arch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel import ctx as pctx
+
+
+def init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16,
+         activation: str = "silu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    del activation  # static; passed to apply() instead
+    return {
+        "w_gate": layers.dense_init(k1, d_model, d_ff, dtype),
+        "w_up": layers.dense_init(k2, d_model, d_ff, dtype),
+        "w_down": layers.dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def apply(p: dict, x: jnp.ndarray, activation: str = "silu") -> jnp.ndarray:
+    act = _ACT[activation]
+    h = act(pctx.shard_batch_tp(layers.dense(p["w_gate"], x))) * \
+        pctx.shard_batch_tp(layers.dense(p["w_up"], x))
+    return layers.dense(p["w_down"], h)

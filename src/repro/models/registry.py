@@ -1,0 +1,34 @@
+"""Model construction + batch stubs: one entry point for every arch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import CausalLM
+from repro.models.whisper import WhisperModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return WhisperModel(cfg)
+    return CausalLM(cfg)
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, rng=None) -> dict:
+    """Synthetic batch with the modality stubs the arch needs."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size,
+                                jnp.int32)
+    out = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.encoder_frames, cfg.d_model),
+            jnp.dtype(cfg.dtype)) * 0.02
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.random.normal(
+            k3, (batch, cfg.image_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype)) * 0.02
+    return out

@@ -1,0 +1,236 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent decay linear RNN.
+
+Implements the time-mix (WKV6) and channel-mix sub-blocks with the
+DDLerp token-shift interpolation and the low-rank data-dependent decay.
+Two WKV evaluation paths:
+
+  * ``scan``   — the faithful per-token recurrence (baseline),
+  * ``chunked`` — chunk-parallel evaluation (intra-chunk matmul form +
+    inter-chunk state scan), the TPU-friendly path used for training and
+    the long_500k shape (§Perf hillclimb subject).
+
+State per head: S (N_k x N_v) with N = head_dim; decode carries (S, last
+token) only — O(1) in sequence length, which is why rwkv6 runs the
+long_500k cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel import ctx as pctx
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+    d_ff: int = 0               # channel-mix hidden (3.5x d_model default)
+    dtype: str = "bfloat16"
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+    @property
+    def ffn_dim(self) -> int:
+        return self.d_ff or int(3.5 * self.d_model)
+
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def init(key, cfg: RWKVConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, n = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 16)
+    p = {
+        "mix_base": jnp.zeros((len(_MIX_NAMES), d), dt),   # mu_i
+        "mix_x": jnp.zeros((d,), dt),                      # mu_x
+        "mix_a": layers.truncated_normal_init(
+            ks[0], (d, len(_MIX_NAMES) * cfg.mix_lora), d ** -0.5, dt),
+        "mix_b": layers.truncated_normal_init(
+            ks[1], (len(_MIX_NAMES), cfg.mix_lora, d),
+            cfg.mix_lora ** -0.5, dt),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),   # w0
+        "decay_a": layers.truncated_normal_init(
+            ks[2], (d, cfg.decay_lora), d ** -0.5, dt),
+        "decay_b": layers.truncated_normal_init(
+            ks[3], (cfg.decay_lora, d), cfg.decay_lora ** -0.5, dt),
+        "bonus": jnp.zeros((cfg.num_heads, n), jnp.float32),  # u
+        "wr": layers.dense_init(ks[4], d, d, dt),
+        "wk": layers.dense_init(ks[5], d, d, dt),
+        "wv": layers.dense_init(ks[6], d, d, dt),
+        "wg": layers.dense_init(ks[7], d, d, dt),
+        "wo": layers.dense_init(ks[8], d, d, dt),
+        "ln_x": layers.layernorm_init(d, dt),              # per-head GN approx
+        # channel mix
+        "cm_mix_k": jnp.full((d,), 0.5, dt),
+        "cm_mix_r": jnp.full((d,), 0.5, dt),
+        "cm_k": layers.dense_init(ks[9], d, cfg.ffn_dim, dt),
+        "cm_v": layers.dense_init(ks[10], cfg.ffn_dim, d, dt),
+        "cm_r": layers.dense_init(ks[11], d, d, dt),
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray | None = None):
+    """x (B,T,d) -> previous-token x; position 0 sees `last` (or zeros)."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([first, prev[:, 1:]], axis=1)
+
+
+def _ddlerp(p: dict, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Data-dependent interpolation for the 5 mix streams (RWKV6)."""
+    xx = x_prev - x
+    base = x + xx * p["mix_x"]
+    lora = jnp.tanh(base @ p["mix_a"])                      # (B,T,5*Lm)
+    lora = lora.reshape(x.shape[:-1] + (len(_MIX_NAMES), -1))
+    adj = jnp.einsum("btml,mld->btmd", lora.astype(x.dtype), p["mix_b"])
+    outs = []
+    for i, _ in enumerate(_MIX_NAMES):
+        mi = p["mix_base"][i] + adj[..., i, :]
+        outs.append(x + xx * mi)
+    return outs  # xw, xk, xv, xr, xg
+
+
+def _decay(p: dict, xw: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel data-dependent log-decay (negative), f32 (B,T,d)."""
+    lora = jnp.tanh(xw @ p["decay_a"]).astype(jnp.float32) @ \
+        p["decay_b"].astype(jnp.float32)
+    return -jnp.exp(p["decay_base"] + lora)  # log w_t <= 0
+
+
+def _wkv_scan(r, k, v, logw, u):
+    """Faithful recurrence.  r,k,v (B,T,H,N); logw (B,T,H,N); u (H,N)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                   # (B,H,N)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = jnp.exp(w_t)[..., None] * s + kv
+        return s, y
+
+    b, t, h, n = r.shape
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), logw.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3)                # (B,T,H,N)
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk: int = 64):
+    """Chunk-parallel WKV6: intra-chunk matmul + inter-chunk state scan.
+
+    Within a chunk of length L the contribution of token j to output i>j is
+    r_i . (prod_{j<u<=i} w_u) (k_j x v_j); plus the u-bonus diagonal and the
+    carried-in state decayed to position i.  All per-chunk terms are
+    matmuls over (L, L) or (L, N) — MXU-shaped.
+    """
+    b, t0, h, n = r.shape
+    pad = (-t0) % chunk
+    if pad:  # zero r/k/v rows contribute nothing; logw=0 means decay 1
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+    t = t0 + pad
+    c = t // chunk
+    rs = r.reshape(b, c, chunk, h, n).astype(jnp.float32)
+    ks = k.reshape(b, c, chunk, h, n).astype(jnp.float32)
+    vs = v.reshape(b, c, chunk, h, n).astype(jnp.float32)
+    ws = logw.reshape(b, c, chunk, h, n)
+    cum = jnp.cumsum(ws, axis=2)                    # inclusive cumsum of logw
+    # y_t reads the state *before* w_t is applied (scan semantics), so the
+    # pairwise decay for (i, j), i > j is sum_{u=j+1}^{i-1} w_u
+    # = cum_excl_i - cum_incl_j with cum_excl = cum - w.
+    r_dec = rs * jnp.exp(cum - ws)                  # r_i * exp(cum_{i-1})
+    k_dec = ks * jnp.exp(-cum)                      # k_j * exp(-cum_j)
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    scores = scores * tri[None, None, None]
+    diag = jnp.einsum("bclhn,hn,bclhn->bclh", rs, u, ks)
+    y_intra = jnp.einsum("bchlm,bcmhn->bclhn", scores, vs)
+    y_intra = y_intra + diag[..., None] * vs
+    # chunk summary state: S_c = sum_j exp(cum_L - cum_j) k_j x v_j
+    w_total = cum[:, :, -1]                         # (b,c,h,n)
+    k_tail = ks * jnp.exp(w_total[:, :, None] - cum)
+    s_chunk = jnp.einsum("bclhk,bclhv->bchkv", k_tail, vs)
+    # inter-chunk scan: H_c = exp(w_total_c) H_{c-1} + S_c
+    def step(hprev, inp):
+        wt, sc = inp                                # (b,h,n), (b,h,n,n)
+        hnew = jnp.exp(wt)[..., None] * hprev + sc
+        return hnew, hprev
+
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    _, h_in = jax.lax.scan(
+        step, s0, (w_total.transpose(1, 0, 2, 3),
+                   s_chunk.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)            # (b,c,h,n,n) state entering chunk
+    y_inter = jnp.einsum("bclhk,bchkv->bclhv", r_dec, h_in)
+    y = (y_intra + y_inter).reshape(b, t, h, n)
+    return y[:, :t0]
+
+
+def time_mix(p: dict, x: jnp.ndarray, cfg: RWKVConfig, impl: str = "chunked",
+             chunk: int = 64) -> jnp.ndarray:
+    b, t, d = x.shape
+    h, n = cfg.num_heads, cfg.head_dim
+    xw, xk, xv, xr, xg = _ddlerp(p, x, _token_shift(x))
+    tp = pctx.shard_batch_tp
+    logw = tp(_decay(p, xw)).reshape(b, t, h, n)
+    r = tp(layers.dense(p["wr"], xr)).reshape(b, t, h, n).astype(jnp.float32)
+    k = tp(layers.dense(p["wk"], xk)).reshape(b, t, h, n).astype(jnp.float32)
+    v = tp(layers.dense(p["wv"], xv)).reshape(b, t, h, n).astype(jnp.float32)
+    g = tp(layers.dense(p["wg"], xg))
+    if impl == "scan":
+        y = _wkv_scan(r, k, v, logw, p["bonus"])
+    else:
+        y = _wkv_chunked(r, k, v, logw, p["bonus"], chunk)
+    y = y.reshape(b, t, d).astype(x.dtype)
+    y = layers.layernorm(p["ln_x"], y)
+    return layers.dense(p["wo"], y * jax.nn.silu(g))
+
+
+def time_mix_decode(p: dict, x: jnp.ndarray, state: dict, cfg: RWKVConfig):
+    """One-token step.  x (B,1,d); state {"s": (B,H,N,N) f32, "last": (B,d)}."""
+    b, _, d = x.shape
+    h, n = cfg.num_heads, cfg.head_dim
+    x_prev = state["last"][:, None, :]
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    logw = _decay(p, xw).reshape(b, h, n)
+    r = layers.dense(p["wr"], xr).reshape(b, h, n).astype(jnp.float32)
+    k = layers.dense(p["wk"], xk).reshape(b, h, n).astype(jnp.float32)
+    v = layers.dense(p["wv"], xv).reshape(b, h, n).astype(jnp.float32)
+    g = layers.dense(p["wg"], xg)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv",
+                   r, state["s"] + p["bonus"][None, :, :, None] * kv)
+    s_new = jnp.exp(logw)[..., None] * state["s"] + kv
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    y = layers.layernorm(p["ln_x"], y)
+    out = layers.dense(p["wo"], y * jax.nn.silu(g))
+    return out, {"s": s_new, "last": x[:, 0, :]}
+
+
+def channel_mix(p: dict, x: jnp.ndarray, last=None) -> jnp.ndarray:
+    xp = _token_shift(x, last)
+    xk = x + (xp - x) * p["cm_mix_k"]
+    xr = x + (xp - x) * p["cm_mix_r"]
+    k = jnp.square(jax.nn.relu(
+        pctx.shard_batch_tp(layers.dense(p["cm_k"], xk))))
+    return jax.nn.sigmoid(layers.dense(p["cm_r"], xr)) * \
+        layers.dense(p["cm_v"], k)
+
+
+def init_state(cfg: RWKVConfig, batch: int) -> dict:
+    h, n = cfg.num_heads, cfg.head_dim
+    return {
+        "s": jnp.zeros((batch, h, n, n), jnp.float32),
+        "last": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        "cm_last": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+    }

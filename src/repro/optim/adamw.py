@@ -1,0 +1,88 @@
+"""AdamW with f32 master weights, built for sharded pytrees.
+
+State = {m, v, master, count}: m/v/master mirror the parameter tree (and
+its shardings — ZeRO-style, the big leaves are already 2-D sharded over
+(data, model)); params stay bf16 for compute and are re-derived from the
+f32 master each step.  Global-norm clipping and a cosine schedule with
+linear warmup are included; all math in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params) -> dict:
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {
+        "m": f32(params),
+        "v": f32(params),
+        "master": jax.tree.map(lambda x: x.astype(jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(grads, state: dict, cfg: AdamWConfig,
+           params_dtype=jnp.bfloat16) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def leaf(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * master if master.ndim >= 2 else 0.0
+        master = master - lr * (upd + decay)
+        return m, v, master
+
+    flat = jax.tree.map(leaf, grads, state["m"], state["v"], state["master"],
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray) or
+                        hasattr(x, "shape"))
+    m = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda x: x.astype(params_dtype), master)
+    new_state = {"m": m, "v": v, "master": master, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

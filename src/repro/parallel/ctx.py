@@ -1,0 +1,124 @@
+"""Distribution context: the mesh and axis names models shard against.
+
+Models are pure functions; they consult this context (set by the launcher
+or a ``use_mesh`` scope) for sharding constraints and shard_map wrapping.
+When no context is set (unit tests, single-CPU smoke runs) every helper
+degrades to a no-op / local path.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: object                       # jax.sharding.Mesh
+    data_axes: tuple[str, ...]         # batch-sharding axes (incl. pod)
+    tp_axis: str                       # tensor-parallel axis
+    seq_axis: Optional[str] = None     # sequence-parallel axis (long ctx)
+
+    @property
+    def batch_spec(self) -> P:
+        return P(self.data_axes)
+
+    @property
+    def num_data_shards(self) -> int:
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+_local = threading.local()
+
+
+def current() -> Optional[MeshCtx]:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, data_axes=("data",), tp_axis: str = "model",
+             seq_axis: Optional[str] = None):
+    prev = current()
+    _local.ctx = MeshCtx(mesh=mesh, data_axes=tuple(data_axes),
+                         tp_axis=tp_axis, seq_axis=seq_axis)
+    try:
+        with mesh:
+            yield _local.ctx
+    finally:
+        _local.ctx = prev
+
+
+def shard(x, *spec) -> object:
+    """Constrain `x` to NamedSharding(mesh, P(*spec)) when a mesh is set."""
+    ctx = current()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard_batch(x) -> object:
+    """Shard the leading (batch) dim over the data axes (skip if it does
+    not divide — e.g. the batch=1 long-context decode cells)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    n = _axes_size(ctx.mesh, ctx.data_axes)
+    if x.shape[0] % n or x.shape[0] < n:
+        return x
+    spec = (ctx.data_axes,) + (None,) * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def shard_heads(x, head_axis: int = 1) -> object:
+    """Constraint for (B, H, T, hd)-shaped tensors: batch over data axes,
+    heads over the TP axis (skipped when H does not divide)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    tp = ctx.mesh.shape[ctx.tp_axis]
+    if x.shape[head_axis] % tp or x.shape[head_axis] < tp:
+        return x
+    nb = _axes_size(ctx.mesh, ctx.data_axes)
+    lead = ctx.data_axes if (x.shape[0] % nb == 0 and x.shape[0] >= nb) \
+        else None
+    spec = [None] * x.ndim
+    spec[0] = lead
+    spec[head_axis] = ctx.tp_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def shard_batch_tp(x) -> object:
+    """Activation constraint: batch over data axes + LAST dim over the TP
+    axis.  Applied to projection outputs (q/k/v, FFN hidden, logits) so
+    the partitioner keeps the per-layer matmuls tensor-parallel instead of
+    replicating them across the model axis."""
+    ctx = current()
+    if ctx is None:
+        return x
+    tp = ctx.mesh.shape[ctx.tp_axis]
+    if x.shape[-1] % tp or x.shape[-1] < tp:
+        return x
+    nb = _axes_size(ctx.mesh, ctx.data_axes)
+    lead = ctx.data_axes if (x.shape[0] % nb == 0 and x.shape[0] >= nb) \
+        else None
+    spec = (lead,) + (None,) * (x.ndim - 2) + (ctx.tp_axis,)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))

@@ -1,0 +1,145 @@
+"""Partition-spec assignment for every parameter / state / input tree.
+
+Strategy (DESIGN.md §5): 2-D weight sharding — the TP dim over ``model``,
+the other big dim over ``data`` (FSDP-style; XLA inserts the all-gathers /
+reduce-scatters) — batch over ``(pod, data)``, experts EP-sharded over
+``data`` (whole experts) + TP over ``model`` (expert hidden), KV caches
+sequence-sharded over ``model`` for the 32k/500k decode shapes.
+
+Specs are assigned by parameter *path name*, which the model code keeps
+deliberately conventional (wq/wk/wv/wo, w_gate/w_up/w_down, in_proj/
+out_proj, embed.table, ...).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# parent-key name -> (spec for 2D weight)
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "lm_head", "cm_k",
+                 "cm_r", "wr", "wg", "in_proj", "mix_a", "decay_a"}
+_ROW_PARALLEL = {"wo", "w_down", "cm_v", "out_proj", "decay_b"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return names
+
+
+def param_spec_for_path(path, leaf, cfg: ModelConfig) -> P:
+    names = _path_names(path)
+    nd = getattr(leaf, "ndim", 0)
+    in_moe_ep = cfg.is_moe and cfg.num_experts >= 64  # EP for big-E archs
+
+    if "embed" in names and names[-1] == "table":
+        return P("model", "data")
+    if names and names[-1] == "b":
+        # bias (possibly layer-stacked): TP-shard the feature dim only,
+        # and only for column-parallel parents (row-parallel outputs are
+        # replicated after the reduce)
+        for name in reversed(names):
+            if name in _COL_PARALLEL:
+                return P(*(None,) * (nd - 1), "model")
+            if name in _ROW_PARALLEL:
+                return P()
+        return P()
+    # MoE stacked expert weights (leading E dim, then layer-stacking may
+    # add more leading dims; match by suffix name and take last 3 dims).
+    if names and names[-1] in ("w_gate", "w_up") and nd >= 3 and cfg.is_moe \
+            and "shared" not in names:
+        lead = (None,) * (nd - 3)
+        e_ax = "data" if in_moe_ep else None
+        return P(*lead, e_ax, None, "model")
+    if names and names[-1] == "w_down" and nd >= 3 and cfg.is_moe \
+            and "shared" not in names:
+        lead = (None,) * (nd - 3)
+        e_ax = "data" if in_moe_ep else None
+        return P(*lead, e_ax, "model", None)
+    for name in reversed(names):
+        if name in _COL_PARALLEL:
+            if nd >= 2:
+                lead = (None,) * (nd - 2)
+                return P(*lead, "data", "model")
+            if nd == 1 and names[-1] == "b":
+                return P("model")
+            return P()
+        if name in _ROW_PARALLEL:
+            if nd >= 2:
+                lead = (None,) * (nd - 2)
+                return P(*lead, "model", "data")
+            return P()
+    return P()  # norms, scalars, router, conv, biases of row-parallel
+
+
+def param_pspecs(params, cfg: ModelConfig):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec_for_path(path, leaf, cfg), params)
+
+
+def param_shardings(params, cfg: ModelConfig, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, cfg))
+
+
+# -- inputs / caches ---------------------------------------------------------
+
+
+def batch_pspecs(batch_tree, data_axes=("pod", "data")):
+    def spec(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0:
+            return P()
+        return P(data_axes, *(None,) * (nd - 1))
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_pspecs(cache_tree, cfg: ModelConfig, data_axes=("pod", "data"),
+                 seq_axis: Optional[str] = "model"):
+    """KV caches: batch over data axes, *sequence* over the model axis
+    (flash-decode layout: works for any kv-head count and spreads the
+    32k/500k cache).  SSM states: batch over data, heads over model."""
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        nd = getattr(leaf, "ndim", 0)
+        name = names[-1] if names else ""
+        if name in ("xk", "xv") and nd >= 4:
+            # cross-attention K/V: short frozen source (1500 frames / image
+            # tokens) — replicate the source dim, shard batch only
+            lead = (None,) * (nd - 4)
+            return P(*lead, data_axes, None, None, None)
+        if name in ("k", "v") and nd >= 4:
+            lead = (None,) * (nd - 4)
+            return P(*lead, data_axes, None, seq_axis, None)
+        if name in ("s", "h") and nd >= 4:   # rwkv/mamba states (B,H,...)
+            lead = (None,) * (nd - 4)
+            return P(*lead, data_axes, seq_axis, None, None)
+        if name == "conv" and nd >= 3:       # (B, W-1, conv_dim)
+            lead = (None,) * (nd - 3)
+            return P(*lead, data_axes, None, None)
+        if name in ("last", "cm_last") and nd >= 2:
+            lead = (None,) * (nd - 2)
+            return P(*lead, data_axes, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def opt_state_pspecs(opt_state, params_specs):
+    """AdamW state: m/v/master mirror the param specs; scalars replicated."""
+    return {
+        "m": params_specs,
+        "v": params_specs,
+        "master": params_specs,
+        "count": P(),
+    }

@@ -1,0 +1,95 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``make_serve_step`` returns the jittable ``serve_step(params, cache,
+tokens, pos)`` the decode_32k / long_500k dry-run cells lower: one new
+token against a KV cache of ``seq_len`` (spec: decode shapes lower
+``serve_step``, not ``train_step``).  Caches are donated by the launcher;
+greedy/temperature sampling is provided for the runnable examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    temperature: float = 0.0         # 0 = greedy
+    max_len: int = 32768
+
+
+def make_decode_step(model):
+    def serve_step(params, cache, tokens, pos):
+        """tokens (B,1) int32; pos () int32 -> (next_tokens (B,1), logits,
+        new_cache)."""
+        logits, new_cache = model.decode_step(params, tokens, cache, pos=pos)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step
+
+
+def make_prefill(model, scfg: ServeConfig):
+    """Prefill = forward over the prompt + cache construction.
+
+    The transformer caches are built by running decode-free forward and
+    then bulk-writing K/V; for simplicity and dry-run fidelity we lower
+    the forward (logits) together with the cache init — the compiled
+    artifact contains both phases.
+    """
+
+    def prefill_step(params, tokens, extras: Optional[dict] = None):
+        extras = extras or {}
+        if model.cfg.family == "audio":
+            logits, _ = model.forward(params, tokens, extras["frames"])
+            cache = model.init_cache(params, tokens.shape[0], scfg.max_len,
+                                     frames=extras["frames"])
+        elif model.cfg.family == "vlm":
+            logits, _ = model.forward(
+                params, tokens, image_embeds=extras["image_embeds"])
+            cache = model.init_cache(params, tokens.shape[0], scfg.max_len,
+                                     image_embeds=extras["image_embeds"])
+        else:
+            logits, _ = model.forward(params, tokens)
+            cache = model.init_cache(params, tokens.shape[0], scfg.max_len)
+        return logits, cache
+
+    return prefill_step
+
+
+def generate(model, params, prompt: jnp.ndarray, steps: int,
+             scfg: ServeConfig, extras: Optional[dict] = None,
+             rng=None) -> jnp.ndarray:
+    """Greedy/temperature autoregressive generation (example driver)."""
+    extras = extras or {}
+    b, t0 = prompt.shape
+    if model.cfg.family == "audio":
+        cache = model.init_cache(params, b, scfg.max_len,
+                                 frames=extras["frames"])
+    elif model.cfg.family == "vlm":
+        cache = model.init_cache(params, b, scfg.max_len,
+                                 image_embeds=extras["image_embeds"])
+    else:
+        cache = model.init_cache(params, b, scfg.max_len)
+    # teacher-force the prompt token by token (robust across families)
+    tok = prompt[:, :1]
+    out = [tok]
+    decode = jax.jit(lambda p, c, t, pos: model.decode_step(p, t, c, pos=pos))
+    for i in range(t0 + steps - 1):
+        logits, cache = decode(params, cache, tok, jnp.asarray(i, jnp.int32))
+        if i + 1 < t0:
+            tok = prompt[:, i + 1:i + 2]
+        else:
+            if scfg.temperature > 0:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(
+                    sub, logits[:, -1] / scfg.temperature)[:, None]
+                tok = tok.astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,76 @@
+"""Wave-trace counters: degree definition, occupancy, Table-1 aggregation."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import counters, timing
+
+
+def test_wave_degree_extremes():
+    solid = np.zeros(1024, np.int64)
+    assert counters.wave_degree(solid) == 32.0          # full serialization
+    distinct = np.arange(1024)
+    assert counters.wave_degree(distinct) == 1.0        # conflict-free
+
+
+def test_wave_degree_reorder_effect():
+    """4 distinct bins per 32-lane group -> degree 8 (paper Listing 2)."""
+    idx = np.tile(np.repeat(np.arange(4), 8), 32)
+    assert counters.wave_degree(idx) == 8.0
+
+
+def test_wave_degree_padding_adds_no_conflicts():
+    idx = np.zeros(40, np.int64)  # pads to 64 with unique sentinels
+    d = counters.wave_degree(idx, lanes=64, group=32)
+    assert d == (32 + 8) / 2  # group1 fully solid, group2 8 solid + 24 pads
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(0, 255), min_size=32, max_size=512))
+def test_wave_degree_bounds(ids):
+    d = counters.wave_degree(np.asarray(ids))
+    assert 1.0 <= d <= 32.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 20), st.integers(0, 255))
+def test_solid_stream_always_degree_32(num_waves, color):
+    idx = np.full(num_waves * 1024, color)
+    tr = counters.trace_from_indices(idx, 256, num_cores=4)
+    assert np.allclose(tr.degree, 32.0)
+
+
+def test_trace_core_assignment_round_robin():
+    idx = np.arange(8 * 1024)
+    tr = counters.trace_from_indices(idx, 1 << 14, num_cores=4,
+                                     waves_per_tile=2)
+    assert tr.num_waves == 8
+    np.testing.assert_array_equal(tr.core, [0, 0, 1, 1, 2, 2, 3, 3])
+
+
+def test_occupancy_and_true_n():
+    idx = np.zeros(64 * 1024, np.int64)
+    tr = counters.trace_from_indices(idx, 256, num_cores=1, waves_per_tile=8)
+    o = tr.occupancy(64)
+    assert o == 16 / 64   # 8 waves x depth 2
+    n_true = tr.true_n(64)
+    assert 0 < n_true <= 16
+
+
+def test_collect_basic_counters_conservation():
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, 256, 16 * 1024)
+    tr = counters.trace_from_indices(idx, 256, num_cores=4)
+    basic = counters.collect_basic_counters(tr, num_cores=4)
+    assert sum(b.N_f for b in basic) == tr.num_waves
+    total_o = sum(b.O for b in basic)
+    np.testing.assert_allclose(total_o, tr.degree.sum())
+    e = total_o / tr.num_waves
+    assert 1.0 <= e <= 32.0
+
+
+def test_job_classes_respected():
+    idx = np.zeros(2048, np.int64)
+    tr = counters.trace_from_indices(idx, 16, job_class=timing.CAS)
+    basic = counters.collect_basic_counters(tr, num_cores=1)
+    assert basic[0].N_c == tr.num_waves and basic[0].N_f == 0

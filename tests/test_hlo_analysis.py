@@ -1,0 +1,84 @@
+"""HLO cost analyzer: trip-count awareness, dot FLOPs, collective parsing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hlo
+
+
+def test_scan_trip_count_flops():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((7, 128, 128), jnp.float32)
+
+    def f(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    c = jax.jit(f).lower(x, w).compile()
+    mc = hlo.analyze_module(c.as_text(), 1)
+    expect = 2 * 128 ** 3 * 7
+    assert 1.0 <= mc.flops / expect < 1.25
+    assert mc.unresolved_loops == 0
+
+
+def test_nested_scan_multiplies():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x):
+        def outer(h, _):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ h2), None
+            h, _ = jax.lax.scan(inner, h, None, length=3)
+            return h, None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    c = jax.jit(f).lower(x).compile()
+    mc = hlo.analyze_module(c.as_text(), 1)
+    expect = 2 * 64 ** 3 * 15
+    assert 0.9 <= mc.flops / expect < 1.3, mc.flops / expect
+
+
+def test_shape_bytes():
+    assert hlo.shape_bytes("f32[2,3]") == 24
+    assert hlo.shape_bytes("bf16[10]{0}") == 20
+    assert hlo.shape_bytes("(f32[2], s32[4])") == 24
+    assert hlo.shape_bytes("pred[]") == 1
+    assert hlo.shape_bytes("token[]") == 0
+
+
+def test_ring_wire_model():
+    rw = hlo.CollectiveOp.ring_wire_bytes
+    assert rw("all-gather", 100, 4) == 300
+    assert rw("all-reduce", 100, 4) == 150
+    assert rw("reduce-scatter", 100, 4) == 75
+    assert rw("collective-permute", 100, 4) == 100
+    assert rw("all-reduce", 100, 1) == 0
+
+
+def test_collectives_detected_in_sharded_program():
+    if len(jax.devices()) < 1:
+        return
+    # single-device: jit a psum via shard_map over a 1-axis mesh still emits
+    # an all-reduce in the unoptimized case only; instead parse a canned line
+    text = """
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  ROOT %ar = f32[8,8]{1,0} all-reduce(%p0), replica_groups=[2,4]<=[8], to_apply=%add
+}
+"""
+    mc = hlo.analyze_module(text, 8)
+    assert len(mc.collectives) == 1
+    op = mc.collectives[0]
+    assert op.opcode == "all-reduce"
+    assert op.operand_bytes == 256
+    assert op.group_size == 4
+    np.testing.assert_allclose(op.wire_bytes, 2 * 256 * 3 / 4)
+
+
+def test_memory_analysis_dict_tolerant():
+    c = jax.jit(lambda x: x + 1).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)).compile()
+    d = hlo.memory_analysis_dict(c)
+    assert isinstance(d, dict)

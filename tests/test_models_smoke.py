@@ -1,0 +1,59 @@
+"""Per-arch smoke tests (assignment requirement): reduced same-family
+config, one forward + one train step on CPU, output shapes + no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.registry import build_model, make_batch
+from repro.optim import adamw
+from repro.train import step as train_mod
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 32)
+    if cfg.family == "audio":
+        logits, _ = model.forward(params, batch["tokens"], batch["frames"])
+    else:
+        logits, _ = model.forward(params, batch["tokens"],
+                                  image_embeds=batch.get("image_embeds"))
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    tcfg = train_mod.TrainConfig(accum_steps=2)
+    ocfg = adamw.AdamWConfig(warmup_steps=1, total_steps=10)
+    step = jax.jit(train_mod.make_train_step(model, tcfg, ocfg))
+    state = train_mod.init_state(model, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 32)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["xent"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_state["step"]) == 1
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "gemma2-27b", "rwkv6-7b"])
+def test_full_config_param_count_sane(arch):
+    """Full configs only via analytics (no allocation)."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {"qwen2-72b": 72e9, "gemma2-27b": 27e9, "rwkv6-7b": 7e9}[arch]
+    assert 0.5 * expected < n < 1.7 * expected, n

@@ -1,0 +1,116 @@
+"""Queuing model: paper Eqs. 1-3, Tables 1-2, operational laws."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import microbench, qmodel, timing
+
+TABLE = microbench.build_table()
+
+
+def test_table_shape_and_boundary():
+    assert TABLE.n_grid[0] == 0 and np.allclose(TABLE.T[0], 0.0)
+    assert TABLE.e_grid[0] == 1 and TABLE.e_grid[-1] == 32
+    assert TABLE.T.shape == (65, 32, 17)
+
+
+def test_paper_fig1_shape_load_pipelining():
+    """S decreases with n (pipelining amortizes fill latency)."""
+    s1 = TABLE.service_time(1, 8, 0)
+    s16 = TABLE.service_time(16, 8, 0)
+    s64 = TABLE.service_time(64, 8, 0)
+    assert s1 > s16 > s64
+
+
+def test_paper_fig1_shape_conflict_serialization():
+    """S increases with serialization degree e."""
+    lo = TABLE.service_time(32, 1, 0)
+    hi = TABLE.service_time(32, 32, 0)
+    assert hi > lo
+    # >10x dynamic range across the table (paper §1)
+    smin = TABLE.service_time(64, 1, 0)
+    smax = TABLE.service_time(1, 32, 1)
+    assert smax / smin > 10
+
+
+def test_cas_class_costs_more_and_popc_less():
+    fao = TABLE.service_time(16, 8, 0)
+    cas = TABLE.service_time(16, 8, 16)
+    popc = TABLE.popc_service_time(16, 8)
+    assert cas > fao > popc
+
+
+def test_exact_on_lattice_points():
+    for n, e, c in [(1, 1, 0), (16, 8, 8), (64, 32, 64), (32, 17, 16)]:
+        expect = timing.total_time_cycles(n, e, c)
+        got = TABLE.total_time(n, e, c)
+        np.testing.assert_allclose(got, expect, rtol=1e-12)
+
+
+@settings(max_examples=200, deadline=None)
+@given(n=st.floats(0.0, 64.0), e=st.floats(1.0, 32.0),
+       cfrac=st.floats(0.0, 1.0))
+def test_interpolation_bounded_by_neighbors(n, e, cfrac):
+    """Interpolated T lies within the hull of its 8 lattice neighbors."""
+    c = cfrac * n
+    got = float(TABLE.total_time(n, e, c))
+    n0, n1 = np.floor(n), min(np.ceil(n), 64)
+    e0, e1 = np.floor(e), min(np.ceil(e), 32)
+    corners = []
+    for nn in {n0, n1}:
+        for ee in {e0, e1}:
+            for cf in (np.floor(cfrac * 16) / 16, min(np.ceil(cfrac * 16) / 16, 1.0)):
+                corners.append(float(TABLE.total_time(nn, ee, cf * nn)))
+    assert min(corners) - 1e-6 <= got <= max(corners) + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.floats(0.5, 64.0), e=st.floats(1.0, 32.0))
+def test_service_time_is_T_over_n(n, e):
+    t = float(TABLE.total_time(n, e, 0.0))
+    s = float(TABLE.service_time(n, e, 0.0))
+    np.testing.assert_allclose(s, t / n, rtol=1e-9)
+
+
+def test_operational_laws():
+    assert qmodel.throughput(100, 50) == 2.0
+    assert qmodel.utilization_law(2.0, 0.25) == 0.5
+    assert qmodel.littles_law_queue(2.0, 3.0) == 6.0
+    assert qmodel.flow_balanced(10, 10)
+    assert not qmodel.flow_balanced(10, 9)
+
+
+def test_derive_core_utilization_table2():
+    counters = [qmodel.BasicCounters(
+        O=320.0, N_f=90.0, N_c=10.0, T_cycles=10000.0, occupancy=0.5,
+        core_id=i) for i in range(2)]
+    rows = qmodel.derive_core_utilization(counters, TABLE)
+    for r in rows:
+        assert r.N == 100
+        np.testing.assert_allclose(r.n_hat, 32.0)      # o * n_max
+        np.testing.assert_allclose(r.e, 3.2)           # O / sum N
+        np.testing.assert_allclose(r.c, 32.0 * 0.1)    # n * Nc/N
+        assert 0 < r.U < 1
+        np.testing.assert_allclose(r.B_cycles, r.N * r.S_cycles)
+        np.testing.assert_allclose(r.U, r.B_cycles / r.T_cycles)
+
+
+def test_true_n_replaces_occupancy_estimate():
+    c = [qmodel.BasicCounters(O=100, N_f=100, N_c=0, T_cycles=1e4,
+                              occupancy=1.0, n_true=4.0)]
+    est = qmodel.derive_core_utilization(c, TABLE, use_true_n=False)[0]
+    tru = qmodel.derive_core_utilization(c, TABLE, use_true_n=True)[0]
+    assert est.n_hat == 64.0 and tru.n_hat == 4.0
+    # the paper's >100% artifact: overestimated n -> underestimated S ->
+    # with low true concurrency the busy time is larger
+    assert tru.B_cycles > est.B_cycles
+
+
+def test_save_load_roundtrip(tmp_path):
+    p = str(tmp_path / "table.npz")
+    TABLE.save(p)
+    t2 = qmodel.ServiceTimeTable.load(p)
+    np.testing.assert_allclose(t2.T, TABLE.T)
+    np.testing.assert_allclose(
+        t2.service_time(13.5, 7.2, 3.3), TABLE.service_time(13.5, 7.2, 3.3))

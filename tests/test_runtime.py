@@ -1,0 +1,79 @@
+"""Fault-tolerance runtime: heartbeats, failure/restart, elastic, stragglers."""
+
+import numpy as np
+
+from repro.runtime import fault_tolerance as ft
+from repro.runtime import stragglers
+
+
+def test_coordinator_detects_missed_beats():
+    c = ft.Coordinator(num_hosts=3, timeout_s=1.0)
+    for h in range(3):
+        c.beat(h, now=100.0)
+    assert c.healthy(now=100.5)
+    c.beat(0, now=102.0)
+    c.beat(1, now=102.0)
+    assert c.dead_hosts(now=102.5) == [2]
+
+
+def test_failure_injection_and_restart():
+    calls = {"train": 0, "restore": 0, "save": []}
+
+    def train_one(step):
+        calls["train"] += 1
+        return {"xent": 1.0 / (step + 1)}
+
+    def save(step):
+        calls["save"].append(step)
+
+    def restore():
+        calls["restore"] += 1
+        return calls["save"][-1] if calls["save"] else 0
+
+    coord = ft.Coordinator(num_hosts=2)
+    inj = ft.FailureInjector({7: 1})
+    out = ft.run_with_restarts(
+        num_steps=12, train_one_step=train_one, save_every=5,
+        save_fn=save, restore_fn=restore, coordinator=coord, injector=inj)
+    assert out["restarts"] == 1
+    assert calls["restore"] == 1
+    # steps 5..6 replayed after restore-from-5
+    assert calls["train"] == 12 + 2
+    assert [h["step"] for h in out["history"]][-1] == 11
+
+
+def test_restart_budget_enforced():
+    coord = ft.Coordinator(num_hosts=1)
+    inj = ft.FailureInjector({i: 0 for i in range(10)})
+    try:
+        ft.run_with_restarts(
+            num_steps=5, train_one_step=lambda s: {},
+            save_every=100, save_fn=lambda s: None, restore_fn=lambda: 0,
+            coordinator=coord, injector=inj, max_restarts=2)
+        raise AssertionError("expected restart budget error")
+    except RuntimeError:
+        pass
+
+
+def test_plan_remesh_shrink():
+    plan = ft.plan_remesh((2, 16, 16), ("pod", "data", "model"), 300)
+    assert plan.action == "shrink"
+    assert plan.new_shape == (1, 16, 16)
+    plan2 = ft.plan_remesh((2, 16, 16), ("pod", "data", "model"), 512)
+    assert not plan2.changed
+
+
+def test_straggler_detection():
+    times = {0: [1.0] * 20, 1: [1.02] * 20, 2: [1.5] * 20, 3: [0.98] * 20}
+    reports = stragglers.detect(times)
+    flagged = [r.host_id for r in reports if r.is_straggler]
+    assert flagged == [2]
+    slow = [r for r in reports if r.host_id == 2][0]
+    np.testing.assert_allclose(slow.barrier_utilization, 1.0)
+    assert "2" in stragglers.mitigation(reports)
+
+
+def test_no_stragglers_on_uniform_fleet():
+    times = {h: list(np.random.default_rng(h).normal(1.0, 0.01, 20))
+             for h in range(8)}
+    assert not [r for r in stragglers.detect(times) if r.is_straggler]

@@ -1,0 +1,89 @@
+"""RWKV6 and Mamba2 math: chunked == scan == stepwise decode (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import mamba2, rwkv6
+
+
+def _rwkv_cfg():
+    return rwkv6.RWKVConfig(d_model=64, head_dim=16, decay_lora=8,
+                            mix_lora=4, d_ff=128, dtype="float32")
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(4, 48), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 1000))
+def test_rwkv_chunked_equals_scan(t, chunk, seed):
+    cfg = _rwkv_cfg()
+    p = rwkv6.init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, t, 64),
+                          jnp.float32)
+    y_scan = rwkv6.time_mix(p, x, cfg, impl="scan")
+    y_chunk = rwkv6.time_mix(p, x, cfg, impl="chunked", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_chunk),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_decode_equals_scan():
+    cfg = _rwkv_cfg()
+    p = rwkv6.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64), jnp.float32)
+    y = rwkv6.time_mix(p, x, cfg, impl="scan")
+    st_ = rwkv6.init_state(cfg, 2)
+    st_ = {"s": st_["s"], "last": st_["last"].astype(jnp.float32)}
+    outs = []
+    for t in range(12):
+        o, st_ = rwkv6.time_mix_decode(p, x[:, t:t + 1], st_, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.concatenate(outs, 1)),
+        rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.integers(4, 40), chunk=st.sampled_from([4, 8]),
+       seed=st.integers(0, 1000))
+def test_mamba2_decode_equals_chunked(t, chunk, seed):
+    cfg = mamba2.Mamba2Config(d_model=32, state_dim=8, head_dim=8, expand=2,
+                              chunk=chunk, dtype="float32")
+    p = mamba2.init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, t, 32),
+                          jnp.float32) * 0.5
+    y = mamba2.apply(p, x, cfg)
+    st_ = mamba2.init_state(cfg, 1)
+    st_ = {"h": st_["h"], "conv": st_["conv"].astype(jnp.float32)}
+    outs = []
+    for i in range(t):
+        o, st_ = mamba2.decode_step(p, x[:, i:i + 1], st_, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.concatenate(outs, 1)),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_blockwise_attention_equals_dense():
+    from repro.models import attention
+    cfg = attention.AttnConfig(d_model=64, num_heads=4, num_kv_heads=2,
+                               head_dim=16, dtype="float32")
+    p = attention.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64), jnp.float32)
+    dense, _ = attention.attend(p, x, cfg)
+    block, _ = attention.attend(p, x, cfg, kv_block=16)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_blockwise_attention_with_window_and_softcap():
+    from repro.models import attention
+    cfg = attention.AttnConfig(d_model=64, num_heads=4, num_kv_heads=4,
+                               head_dim=16, window=24, logit_softcap=20.0,
+                               dtype="float32")
+    p = attention.init(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 64), jnp.float32)
+    dense, _ = attention.attend(p, x, cfg)
+    block, _ = attention.attend(p, x, cfg, kv_block=16)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                               rtol=1e-4, atol=1e-4)

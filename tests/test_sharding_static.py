@@ -1,0 +1,75 @@
+"""Static dry-run preconditions: every parameter/cache leaf of every FULL
+config must divide over its assigned mesh axes on both production meshes.
+Pure metadata (eval_shape) — no device allocation, fast."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.models.registry import build_model
+from repro.parallel import sharding as shd
+
+MESH_SIZES = {"single": {"data": 16, "model": 16},
+              "pod2": {"pod": 2, "data": 16, "model": 16}}
+
+
+def _axis_size(axes, sizes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return sizes.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+@pytest.mark.parametrize("mesh_name", ["single", "pod2"])
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_divide(arch, mesh_name):
+    sizes = MESH_SIZES[mesh_name]
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = shd.param_pspecs(shapes, cfg)
+
+    bad = []
+
+    def check(path, leaf, spec):
+        assert isinstance(spec, P)
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            n = _axis_size(axes, sizes)
+            if n > 1 and dim % n:
+                bad.append((jax.tree_util.keystr(path), leaf.shape, spec))
+
+    jax.tree_util.tree_map_with_path(
+        check, shapes, specs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+    assert not bad, bad[:10]
+
+
+@pytest.mark.parametrize("arch", ["qwen3-moe-235b-a22b", "command-r-plus-104b"])
+def test_big_params_are_actually_sharded(arch):
+    """The >=64-expert MoE must EP-shard experts; huge dense weights must be
+    2-D sharded (memory feasibility at 16 GiB/chip)."""
+    sizes = MESH_SIZES["single"]
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = shd.param_pspecs(shapes, cfg)
+    leaves = jax.tree_util.tree_leaves_with_path(shapes)
+    spec_leaves = {jax.tree_util.keystr(p): s for p, s in
+                   jax.tree_util.tree_leaves_with_path(
+                       specs, is_leaf=lambda x: isinstance(x, P))}
+    worst = 0
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        spec = spec_leaves[key]
+        shards = 1
+        for axes in tuple(spec):
+            shards *= _axis_size(axes, sizes)
+        per_dev = leaf.size * leaf.dtype.itemsize / shards
+        worst = max(worst, per_dev)
+        assert per_dev < 4e9, (key, leaf.shape, spec, per_dev)
+    assert worst > 0

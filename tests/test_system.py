@@ -1,0 +1,43 @@
+"""End-to-end behaviour: train loop with failure injection + serving."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_cli
+from repro.launch import train as train_cli
+
+
+def test_train_loop_loss_decreases(tmp_path):
+    out = train_cli.main([
+        "--arch", "granite-moe-1b-a400m", "--reduced", "--steps", "12",
+        "--batch", "4", "--seq", "64", "--lr", "3e-3",
+        "--ckpt-dir", str(tmp_path), "--save-every", "5"])
+    hist = out["history"]
+    assert hist[-1]["xent"] < hist[0]["xent"]
+    assert out["restarts"] == 0
+
+
+def test_train_loop_survives_failure(tmp_path):
+    out = train_cli.main([
+        "--arch", "zamba2-1.2b", "--reduced", "--steps", "12",
+        "--batch", "4", "--seq", "64", "--lr", "1e-3",
+        "--ckpt-dir", str(tmp_path), "--save-every", "4",
+        "--simulate-failure-at", "9"])
+    assert out["restarts"] == 1
+    hist = out["history"]
+    # replayed steps appear twice; data determinism makes losses match
+    steps = [h["step"] for h in hist]
+    assert steps[-1] == 11
+    replayed = [h for h in hist if h["step"] == 8]
+    assert len(replayed) == 2
+    np.testing.assert_allclose(replayed[0]["xent"], replayed[1]["xent"],
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "whisper-small"])
+def test_serve_generates(arch):
+    out = serve_cli.main(["--arch", arch, "--reduced", "--batch", "2",
+                          "--prompt-len", "8", "--gen", "6"])
+    assert out.shape == (2, 14)
