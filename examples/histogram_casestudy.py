@@ -2,6 +2,11 @@
 32px..4Mpx x three launch-occupancy settings, utilization + speedup +
 bottleneck-shift detection.  Writes results/casestudy.csv.
 
+Uses the ``repro.analysis`` session API: a derived device carries the
+case-study cache emulation, traces are built once per (kind, variant,
+size) and re-geometried per occupancy point via frozen ``WorkloadSpec``s —
+no post-construction trace mutation.
+
 Run: PYTHONPATH=src python examples/histogram_casestudy.py [--fast]
 """
 
@@ -11,9 +16,10 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import bottleneck, microbench, profiler
+from repro.analysis import Session, WorkloadSpec, get_device
+from repro.core import bottleneck
+from repro.core.profiler import CacheModel
 from repro.data.images import make_image
 from repro.kernels.histogram import ops
 
@@ -25,7 +31,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
-    table = microbench.build_table()
+    device = get_device("v5e").with_(
+        cache=CacheModel(llc_bytes=1 << 21, miss_latency_cycles=800,
+                         hide_concurrency=48))
+    sess = Session(device)
     sizes = [2 ** p for p in range(5, 23, 3 if args.fast else 1)]
     waves_opts = [8, 32] if args.fast else [4, 8, 16, 32]
 
@@ -35,17 +44,16 @@ def main():
     for kind in ("solid", "uniform"):
         for variant in ("hist", "hist2"):
             for n in sizes:
-                img = make_image(kind, n)
+                img = jnp.asarray(make_image(kind, n))
+                # run the instrumented kernel once; re-geometry the trace
+                # per occupancy point instead of re-running it
                 _, tr = ops.histogram_instrumented(
-                    jnp.asarray(img), variant=variant, force_fao=True)
+                    img, variant=variant, force_fao=True)
                 for wpt in waves_opts:
-                    tr.waves_per_tile = wpt
-                    prof = profiler.profile_scatter_workload(
-                        tr, table, label=f"{kind}/{variant}/{n}/{wpt}",
-                        bytes_read=float(n * 4), overhead_cycles=500.0,
-                        cache=profiler.CacheModel(llc_bytes=1 << 21,
-                                                  miss_latency_cycles=800,
-                                                  hide_concurrency=48))
+                    spec = WorkloadSpec.from_trace(
+                        tr, label=f"{kind}/{variant}/{n}/{wpt}",
+                        waves_per_tile=wpt, bytes_read=float(n * 4))
+                    prof = sess.profile(spec)
                     rows.append(
                         f"{kind},{variant},{n},{wpt},"
                         f"{prof.per_core[0].e:.2f},"
@@ -72,8 +80,9 @@ def main():
     print(f"large solid: U={u_solid:.2f} (paper: ~1.0); "
           f"large uniform: U={u_uni:.2f} (paper: ~0.76)")
     print(f"reorder on solid: U {u_solid:.2f} -> {u_solid2:.2f}")
-    shifts = bottleneck.detect_shifts(shift_profiles)
-    for s in shifts:
+    # the profiles are already computed: detect shifts on them directly
+    # instead of re-profiling via sess.sweep
+    for s in bottleneck.detect_shifts(shift_profiles):
         print(f"bottleneck shift at sweep idx {s.index}: "
               f"{s.unit_before} -> {s.unit_after} "
               f"({s.label_before} -> {s.label_after})")

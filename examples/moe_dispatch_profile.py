@@ -19,25 +19,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import Session, WorkloadSpec
 from repro.configs import get_config
-from repro.core import bottleneck, microbench, profiler
-from repro.kernels.scatter_add import ops as scat_ops
 from repro.models import moe
 from repro.models.registry import build_model, make_batch
 
-TABLE = microbench.build_table()
+SESSION = Session(device="v5e")
 
 
 def profile_dispatch(ids: np.ndarray, num_experts: int, label: str):
-    _, c = scat_ops.instrumented_scatter_add(
+    spec = WorkloadSpec.from_scatter_add(
         ids.astype(np.int32), np.ones((ids.size, 1), np.float32),
-        num_experts)
-    tr = c["trace"]
-    tr.waves_per_tile = 32
-    prof = profiler.profile_scatter_workload(
-        tr, TABLE, label=label, bytes_read=float(ids.size * 4),
-        overhead_cycles=500.0)
-    v = bottleneck.classify(prof)
+        num_experts, label=label, waves_per_tile=32)
+    prof = SESSION.profile(spec)
+    v = SESSION.last.verdicts[0]
     print(f"  {label:24s} e={prof.per_core[0].e:5.2f} "
           f"U={prof.scatter_utilization:6.2%}  {v.comment}")
     return prof

@@ -1,10 +1,12 @@
-"""Quickstart: the paper in one page.
+"""Quickstart: the paper's two tools in five lines.
 
-1. Tool 1 — build the once-per-chip service-time table S(n, e, c).
-2. Run the instrumented Pallas histogram kernel on a solid and a uniform
-   image (paper §4's two extremes).
-3. Tool 2 — instantiate the single-server model from the counters and
-   print per-core utilization + the bottleneck verdict.
+1. ``Session(device="v5e")`` — Tool 1: resolves the once-per-chip
+   service-time table S(n, e, c) (built on first ever use, then loaded
+   from the ``.npz`` cache under results/tables/).
+2. ``WorkloadSpec.from_histogram(...)`` — describe an instrumented Pallas
+   histogram launch declaratively (no trace mutation, no kwarg sprawl).
+3. ``sess.profile(spec)`` / ``sess.classify(spec)`` — Tool 2: per-core
+   utilization + the bottleneck verdict.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,53 +17,47 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
 
-from repro.core import bottleneck, microbench, profiler
+from repro.analysis import Session, WorkloadSpec
 from repro.data.images import make_image
 from repro.kernels.histogram import ops
 
 
 def main():
-    # Tool 1: the S(n, e, c) table (analytic v5e timing model on CPU;
-    # wall-clock microbenchmark on real hardware).
-    table = microbench.build_table()
-    print(f"service-time table: n<= {int(table.n_grid[-1])}, "
-          f"e<={int(table.e_grid[-1])}, "
+    sess = Session(device="v5e")
+    table = sess.table
+    print(f"service-time table [{sess.device.name}]: "
+          f"n<={int(table.n_grid[-1])}, e<={int(table.e_grid[-1])}, "
           f"S range {float(table.service_time(64, 1, 0)):.1f}.."
           f"{float(table.service_time(1, 32, 1)):.1f} cycles\n")
 
+    # The paper §4's two extremes: solid (fully serialized) vs uniform.
     for kind in ("solid", "uniform"):
-        img = make_image(kind, 1 << 18)
-        hist, trace = ops.histogram_instrumented(jnp.asarray(img),
-                                                 variant="hist",
-                                                 force_fao=True)
-        trace.waves_per_tile = 32
-        prof = profiler.profile_scatter_workload(
-            trace, table, label=f"{kind} 256Kpx",
-            bytes_read=ops.image_bytes(jnp.asarray(img)),
-            overhead_cycles=500.0)
+        img = jnp.asarray(make_image(kind, 1 << 18))
+        # kernel-correctness smoke: every pixel's 4 channels land somewhere
+        assert int(ops.histogram(img).sum()) == img.shape[0] * 4
+        spec = WorkloadSpec.from_histogram(
+            img, label=f"{kind} 256Kpx", force_fao=True, waves_per_tile=32)
+        prof = sess.profile(spec)
         print(prof.render())
-        verdict = bottleneck.classify(prof)
+        verdict = sess.last.verdicts[0]
         print(f"verdict: {verdict.bottleneck} ({verdict.utilization:.0%}) — "
               f"{verdict.comment}\n")
-        assert int(hist.sum()) == img.shape[0] * 4
 
-    # The fix the model recommends for the solid case: channel reorder.
-    img = make_image("solid", 1 << 18)
-    _, tr1 = ops.histogram_instrumented(jnp.asarray(img), variant="hist",
-                                        force_fao=True)
-    _, tr2 = ops.histogram_instrumented(jnp.asarray(img), variant="hist2",
-                                        force_fao=True)
-    tr1.waves_per_tile = tr2.waves_per_tile = 32
-    p1 = profiler.profile_scatter_workload(
-        tr1, table, label="hist", bytes_read=float(img.shape[0] * 4),
-        overhead_cycles=500.0)
-    p2 = profiler.profile_scatter_workload(
-        tr2, table, label="hist2", bytes_read=float(img.shape[0] * 4),
-        overhead_cycles=500.0)
-    print(f"channel reorder on solid: e {tr1.degree.mean():.0f} -> "
-          f"{tr2.degree.mean():.0f}, predicted speedup "
-          f"{bottleneck.speedup_estimate(p1, p2):.2f}x "
+    # The fix the model recommends for the solid case: channel reorder
+    # (the paper's hist2 kernel).  One sweep call gives both profiles,
+    # the per-point verdicts, and the predicted speedup.
+    img = jnp.asarray(make_image("solid", 1 << 18))
+    specs = [WorkloadSpec.from_histogram(img, label=v, variant=v,
+                                         force_fao=True, waves_per_tile=32)
+             for v in ("hist", "hist2")]
+    result = sess.sweep(specs)
+    e0 = result.profiles[0].per_core[0].e
+    e1 = result.profiles[1].per_core[0].e
+    print(f"channel reorder on solid: e {e0:.0f} -> {e1:.0f}, "
+          f"predicted speedup {float(result.speedup_vs_first[1]):.2f}x "
           f"(paper: ~30% on large monochrome images)")
+    print()
+    print(sess.report())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,24 @@
+"""Public analysis API: Device registry + WorkloadSpec + Session.
+
+The two paper tools in five lines:
+
+    from repro.analysis import Session, WorkloadSpec
+    sess = Session(device="v5e")            # Tool 1: cached S(n, e, c) table
+    spec = WorkloadSpec.from_histogram(img, label="solid 256Kpx",
+                                       waves_per_tile=32)
+    print(sess.classify(spec).comment)      # Tool 2: utilization -> verdict
+
+Older entry points (``repro.core.microbench.build_table`` +
+``repro.core.profiler.profile_scatter_workload``) remain available but are
+deprecated for direct use; new workloads should integrate here.
+"""
+
+from repro.analysis.device import (  # noqa: F401
+    DEVICES,
+    Device,
+    default_cache_dir,
+    get_device,
+    register_device,
+)
+from repro.analysis.workload import WorkloadSpec  # noqa: F401
+from repro.analysis.session import Session, SweepResult  # noqa: F401

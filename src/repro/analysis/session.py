@@ -1,0 +1,191 @@
+"""Session: one-call pipeline from workload spec to bottleneck verdict.
+
+The paper promises a user can "immediately determine if shared-memory
+atomic operations are a bottleneck".  A ``Session`` is that promise as an
+API: it owns a ``Device`` (and therefore the cached service-time table)
+and turns ``WorkloadSpec``s into profiles, sweeps, shift reports, and
+renderable verdicts:
+
+    sess = Session(device="v5e")
+    prof = sess.profile(spec)                 # one launch
+    result = sess.sweep([spec_1, ..., spec_k])  # a parameter sweep
+    print(sess.report())                      # text | json | csv
+"""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+import io
+import json
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.analysis.device import Device, get_device
+from repro.analysis.workload import WorkloadSpec
+from repro.core import bottleneck, profiler, qmodel
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Profiles + per-point verdicts + shift/speedup analysis for a sweep."""
+
+    device: Device
+    specs: list[WorkloadSpec]
+    profiles: list[profiler.WorkloadProfile]
+    verdicts: list[bottleneck.BottleneckVerdict]
+    shifts: list[bottleneck.ShiftEvent]
+    utilization: dict[str, np.ndarray]      # unit name -> per-point U
+    speedup_vs_first: np.ndarray            # modeled T(first) / T(point)
+
+    def __len__(self) -> int:
+        return len(self.profiles)
+
+    @property
+    def bottlenecks(self) -> list[str]:
+        return [p.bottleneck for p in self.profiles]
+
+    # -- renderers --------------------------------------------------------
+
+    def to_rows(self) -> list[dict]:
+        """One flat record per sweep point (the csv/json payload)."""
+        rows = []
+        for i, (p, v) in enumerate(zip(self.profiles, self.verdicts)):
+            row = {
+                "label": p.label,
+                "bottleneck": v.bottleneck,
+                "saturated": v.saturated,
+                "comment": v.comment,
+                "scatter_model_U": p.scatter_utilization,
+                "speedup_vs_first": float(self.speedup_vs_first[i]),
+                "e": p.per_core[0].e if p.per_core else 0.0,
+                "n_hat": p.per_core[0].n_hat if p.per_core else 0.0,
+            }
+            for u in p.units:
+                row[f"U_{u.name}"] = u.utilization
+            rows.append(row)
+        return rows
+
+    def render(self, fmt: str = "text") -> str:
+        if fmt == "json":
+            payload = {
+                "device": self.device.name,
+                "points": self.to_rows(),
+                "shifts": [dataclasses.asdict(s) for s in self.shifts],
+            }
+            return json.dumps(payload, indent=2)
+        if fmt == "csv":
+            rows = self.to_rows()
+            if not rows:
+                return ""
+            buf = io.StringIO()
+            w = csv.DictWriter(buf, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+            return buf.getvalue()
+        if fmt == "text":
+            buf = io.StringIO()
+            buf.write(f"== sweep on {self.device.name} "
+                      f"({len(self.profiles)} points) ==\n")
+            for row in self.to_rows():
+                units = "  ".join(
+                    f"{k[2:]}={row[k]:6.2%}" for k in row if k.startswith("U_"))
+                buf.write(f"{row['label']:>28}  {units}  "
+                          f"-> {row['bottleneck']}"
+                          f"{' (saturated)' if row['saturated'] else ''}\n")
+            if self.shifts:
+                for s in self.shifts:
+                    buf.write(f"bottleneck shift at point {s.index}: "
+                              f"{s.unit_before} -> {s.unit_after} "
+                              f"({s.label_before} -> {s.label_after})\n")
+            else:
+                buf.write("no bottleneck shifts in sweep\n")
+            return buf.getvalue()
+        raise ValueError(f"unknown report format {fmt!r} "
+                         "(expected 'text', 'json' or 'csv')")
+
+
+class Session:
+    """The single public entry point for the paper's two tools.
+
+    Tool 1 (the per-device table) runs implicitly — construction resolves
+    the device's cached ``ServiceTimeTable``, building it only on first
+    ever use.  Tool 2 is ``profile``/``sweep``.
+    """
+
+    def __init__(self, device: Union[str, Device] = "v5e", *,
+                 table: Optional[qmodel.ServiceTimeTable] = None,
+                 cache_dir=None, use_true_n: bool = False) -> None:
+        self.device = get_device(device)
+        self.table = table if table is not None \
+            else self.device.table(cache_dir)
+        self.use_true_n = use_true_n
+        self._last: Optional[SweepResult] = None
+
+    # -- the pipeline -----------------------------------------------------
+
+    def profile(self, spec: WorkloadSpec) -> profiler.WorkloadProfile:
+        """Run one spec through counters -> queue model -> utilization."""
+        prof = self._profile_only(spec)
+        self._last = self._as_result([spec], [prof])
+        return prof
+
+    def classify(self, spec: WorkloadSpec) -> bottleneck.BottleneckVerdict:
+        """Spec straight to verdict (the paper's 'immediately determine')."""
+        self.profile(spec)
+        return self._last.verdicts[0]
+
+    def sweep(self, specs: Sequence[WorkloadSpec]) -> SweepResult:
+        """Profile every spec and analyze the sweep as a whole."""
+        specs = list(specs)
+        if not specs:
+            raise ValueError("sweep() needs at least one WorkloadSpec")
+        profiles = [self._profile_only(s) for s in specs]
+        self._last = self._as_result(specs, profiles)
+        return self._last
+
+    def speedup(self, before: WorkloadSpec, after: WorkloadSpec) -> float:
+        """Predicted speedup of ``after`` over ``before``."""
+        return bottleneck.speedup_estimate(self._profile_only(before),
+                                           self._profile_only(after))
+
+    # -- reporting --------------------------------------------------------
+
+    @property
+    def last(self) -> Optional[SweepResult]:
+        return self._last
+
+    def report(self, fmt: str = "text") -> str:
+        """Render the most recent profile()/sweep() result."""
+        if self._last is None:
+            raise RuntimeError("nothing profiled yet — call profile() or "
+                               "sweep() before report()")
+        return self._last.render(fmt)
+
+    # -- internals --------------------------------------------------------
+
+    def _profile_only(self, spec: WorkloadSpec) -> profiler.WorkloadProfile:
+        return profiler.profile_scatter_workload(
+            spec.resolve_trace(), self.table,
+            label=spec.label,
+            bytes_read=spec.bytes_read,
+            flops=spec.flops,
+            num_cores=spec.num_cores,
+            overhead_cycles=spec.overhead_cycles,
+            params=self.device.scatter,
+            chip=self.device.chip,
+            cache=self.device.cache,
+            use_true_n=self.use_true_n,
+        )
+
+    def _as_result(self, specs, profiles) -> SweepResult:
+        verdicts = [bottleneck.classify(p) for p in profiles]
+        shifts = bottleneck.detect_shifts(profiles)
+        utilization = profiler.utilization_sweep(profiles)
+        speedups = np.array([
+            bottleneck.speedup_estimate(profiles[0], p) for p in profiles])
+        return SweepResult(
+            device=self.device, specs=list(specs), profiles=list(profiles),
+            verdicts=verdicts, shifts=shifts, utilization=utilization,
+            speedup_vs_first=speedups)

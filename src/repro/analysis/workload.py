@@ -1,0 +1,150 @@
+"""WorkloadSpec: an immutable description of one scatter-heavy launch.
+
+The old call path required the caller to (a) run an instrumented kernel,
+(b) mutate ``trace.waves_per_tile`` after the fact, and (c) thread 11
+kwargs into ``profiler.profile_scatter_workload``.  A ``WorkloadSpec``
+captures all of that declaratively: what runs (an index stream, an
+existing wave trace, or an instrumented kernel launch), under which launch
+geometry, and with which roofline-side inputs (bytes read, FLOPs,
+overhead).  Specs are frozen — sweeps derive variants with ``with_()``
+instead of mutating shared state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import counters as counters_mod
+from repro.core import timing
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One profileable launch: measurement source + geometry + roofline.
+
+    Exactly one of ``trace`` / ``indices`` / ``run`` is the measurement
+    source (checked at resolve time).  ``run`` is a zero-arg callable
+    returning a ``WaveTrace`` — the hook for instrumented-kernel sources
+    (see ``from_histogram`` / ``from_scatter_add``), kept lazy so building
+    a sweep's spec list costs nothing until ``Session.profile`` runs it.
+    """
+
+    label: str
+    # measurement source (one of):
+    trace: Optional[counters_mod.WaveTrace] = None
+    indices: Optional[np.ndarray] = None
+    run: Optional[Any] = None          # () -> WaveTrace, lazy kernel source
+    # index-stream interpretation (for the ``indices`` source):
+    num_bins: int = 256
+    job_class: int = timing.FAO
+    # launch geometry:
+    waves_per_tile: Optional[int] = None   # None: keep the source's own
+    pipeline_depth: Optional[int] = None
+    num_cores: int = 8
+    # roofline-side inputs:
+    bytes_read: float = 0.0
+    flops: float = 0.0
+    overhead_cycles: float = 500.0
+
+    def __post_init__(self) -> None:
+        sources = sum(s is not None
+                      for s in (self.trace, self.indices, self.run))
+        if sources != 1:
+            raise ValueError(
+                f"WorkloadSpec {self.label!r} needs exactly one measurement "
+                f"source (trace | indices | run), got {sources}")
+
+    # -- derivation -------------------------------------------------------
+
+    def with_(self, **changes) -> "WorkloadSpec":
+        """Frozen-friendly variant derivation (sweeps, relabeling)."""
+        return dataclasses.replace(self, **changes)
+
+    def resolve_trace(self) -> counters_mod.WaveTrace:
+        """Materialize the wave trace with this spec's geometry applied.
+
+        Never mutates the source trace: geometry overrides produce a
+        copied-geometry view via ``WaveTrace.with_geometry``.
+        """
+        if self.trace is not None:
+            tr = self.trace
+        elif self.run is not None:
+            tr = self.run()
+        else:
+            tr = counters_mod.trace_from_indices(
+                np.asarray(self.indices), self.num_bins,
+                num_cores=self.num_cores, job_class=self.job_class,
+                waves_per_tile=self.waves_per_tile or 1,
+                pipeline_depth=self.pipeline_depth or 2)
+        if self.waves_per_tile is not None or self.pipeline_depth is not None:
+            tr = tr.with_geometry(self.waves_per_tile, self.pipeline_depth)
+        return tr
+
+    # -- constructors -----------------------------------------------------
+
+    @classmethod
+    def from_trace(cls, trace: counters_mod.WaveTrace, *, label: str,
+                   **kw) -> "WorkloadSpec":
+        return cls(label=label, trace=trace, **kw)
+
+    @classmethod
+    def from_indices(cls, indices, num_bins: int, *, label: str,
+                     **kw) -> "WorkloadSpec":
+        """Synthetic/offline index stream (no kernel run needed)."""
+        spec = cls(label=label, indices=np.asarray(indices),
+                   num_bins=num_bins, **kw)
+        if spec.bytes_read == 0.0:
+            spec = spec.with_(bytes_read=float(np.asarray(indices).size * 4))
+        return spec
+
+    @classmethod
+    def from_histogram(cls, img, *, label: str, variant: str = "hist",
+                       force_fao: bool = True, weighted: bool = False,
+                       num_bins: int = 256, **kw) -> "WorkloadSpec":
+        """Instrumented Pallas histogram launch as the trace source.
+
+        ``bytes_read`` defaults to the image's HBM traffic (1 byte per
+        channel, as in the paper's case study).
+        """
+        from repro.kernels.histogram import ops as hist_ops  # lazy: pulls jax
+
+        spec_kw = dict(kw)
+        num_cores = spec_kw.get("num_cores", 8)
+        # forward the launch geometry into the kernel wrapper so core
+        # round-robin assignment matches the direct-call and indices paths
+        wpt = spec_kw.get("waves_per_tile")
+        depth = spec_kw.get("pipeline_depth") or 2
+
+        def _run(img=img):
+            _, tr = hist_ops.histogram_instrumented(
+                img, variant=variant, force_fao=force_fao,
+                weighted=weighted, num_bins=num_bins, num_cores=num_cores,
+                waves_per_tile=wpt, pipeline_depth=depth)
+            return tr
+
+        spec_kw.setdefault("bytes_read", hist_ops.image_bytes(img))
+        return cls(label=label, run=_run, **spec_kw)
+
+    @classmethod
+    def from_scatter_add(cls, ids, values, num_segments: int, *, label: str,
+                         job_class: int = timing.FAO, **kw) -> "WorkloadSpec":
+        """Instrumented Pallas scatter-add launch as the trace source."""
+        from repro.kernels.scatter_add import ops as scat_ops  # lazy
+
+        spec_kw = dict(kw)
+        num_cores = spec_kw.get("num_cores", 8)
+        wpt = spec_kw.get("waves_per_tile")
+        depth = spec_kw.get("pipeline_depth") or 2
+
+        def _run(ids=ids, values=values):
+            _, c = scat_ops.instrumented_scatter_add(
+                ids, values, num_segments, num_cores=num_cores,
+                job_class=job_class, waves_per_tile=wpt,
+                pipeline_depth=depth)
+            return c["trace"]
+
+        spec_kw.setdefault("bytes_read", float(np.asarray(ids).size * 4))
+        return cls(label=label, run=_run, **spec_kw)

@@ -19,3 +19,24 @@ from repro.core.profiler import (  # noqa: F401
     profile_scatter_workload,
 )
 from repro.core.bottleneck import classify, detect_shifts  # noqa: F401
+
+# -- deprecation shims -------------------------------------------------------
+# The session-style entry points live in repro.analysis; these forwards keep
+# pre-analysis call sites (and muscle memory) working.  The direct names
+# above (build_table, profile_scatter_workload, ...) remain supported for
+# low-level use, but new workloads should integrate via repro.analysis.
+
+_ANALYSIS_NAMES = ("Session", "SweepResult", "WorkloadSpec", "Device",
+                   "get_device", "register_device", "DEVICES")
+
+
+def __getattr__(name):
+    if name in _ANALYSIS_NAMES:
+        import warnings
+
+        import repro.analysis as _analysis
+        warnings.warn(
+            f"repro.core.{name} is deprecated; import {name} from "
+            f"repro.analysis instead", DeprecationWarning, stacklevel=2)
+        return getattr(_analysis, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

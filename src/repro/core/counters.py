@@ -81,6 +81,22 @@ class WaveTrace:
     def num_waves(self) -> int:
         return int(self.degree.shape[0])
 
+    def with_geometry(self, waves_per_tile: Optional[int] = None,
+                      pipeline_depth: Optional[int] = None) -> "WaveTrace":
+        """Copy of this trace with a different launch geometry.
+
+        The per-wave records are shared (they are measurement, not
+        geometry); only the occupancy-defining launch parameters change.
+        Prefer this over mutating ``waves_per_tile`` in place.
+        """
+        return dataclasses.replace(
+            self,
+            waves_per_tile=self.waves_per_tile if waves_per_tile is None
+            else int(waves_per_tile),
+            pipeline_depth=self.pipeline_depth if pipeline_depth is None
+            else int(pipeline_depth),
+        )
+
     def occupancy(self, n_max: int) -> float:
         """Achieved concurrency fraction from launch geometry.
 
@@ -121,7 +137,7 @@ def concat_traces(traces: Sequence[WaveTrace]) -> WaveTrace:
         lanes_active=np.concatenate([t.lanes_active for t in traces]),
         waves_per_tile=traces[0].waves_per_tile,
         pipeline_depth=traces[0].pipeline_depth,
-    )
+    )  # geometry from the first trace: concat is per-launch, not cross-launch
 
 
 def trace_from_indices(
@@ -132,6 +148,7 @@ def trace_from_indices(
     wave: int = LANES,
     job_class: int = timing.FAO,
     waves_per_tile: int = 1,
+    pipeline_depth: int = 2,
 ) -> WaveTrace:
     """Build the wave trace a kernel's instrumentation would emit.
 
@@ -159,6 +176,7 @@ def trace_from_indices(
         core=cores,
         lanes_active=active,
         waves_per_tile=waves_per_tile,
+        pipeline_depth=pipeline_depth,
     )
 
 
@@ -167,7 +185,7 @@ def collect_basic_counters(
     *,
     num_cores: int,
     T_cycles_per_core: Optional[np.ndarray] = None,
-    params: timing.ScatterUnitParams = timing.V5E_SCATTER,
+    params: Optional[timing.ScatterUnitParams] = None,
 ) -> list[BasicCounters]:
     """Aggregate a wave trace into per-core paper-Table-1 counters.
 
@@ -176,6 +194,8 @@ def collect_basic_counters(
     the scatter busy time itself (utilization 1.0), which is only useful
     for unit tests.
     """
+    if params is None:
+        params = timing.V5E_SCATTER
     out: list[BasicCounters] = []
     occupancy = trace.occupancy(params.n_max)
     n_true = trace.true_n(params.n_max)

@@ -101,9 +101,9 @@ def profile_scatter_workload(
     flops: float = 0.0,
     num_cores: int = 8,
     overhead_cycles: float = 2000.0,
-    params: timing.ScatterUnitParams = timing.V5E_SCATTER,
-    chip: timing.ChipParams = timing.V5E,
-    cache: CacheModel = CacheModel(),
+    params: Optional[timing.ScatterUnitParams] = None,
+    chip: Optional[timing.ChipParams] = None,
+    cache: Optional[CacheModel] = None,
     use_true_n: bool = False,
 ) -> WorkloadProfile:
     """Profile one scatter-heavy launch (histogram, MoE dispatch, ...).
@@ -111,7 +111,17 @@ def profile_scatter_workload(
     Two-phase, like the paper: (1) collect Table-1 counters and the queue
     model's busy time B (B needs no T); (2) model the measurement window T
     per core from all units and overheads; (3) derive U = B / T.
+
+    ``params``/``chip``/``cache`` default to the v5e model; pass a
+    ``repro.analysis.Device``'s bundle (or use ``Session.profile``) to
+    target other hardware.
     """
+    if params is None:
+        params = timing.V5E_SCATTER
+    if chip is None:
+        chip = timing.V5E
+    if cache is None:
+        cache = CacheModel()
     # Phase 1: counters + scatter busy time, per core.
     basic = counters_mod.collect_basic_counters(
         trace, num_cores=num_cores, T_cycles_per_core=np.ones(num_cores),

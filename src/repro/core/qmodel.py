@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import io
+import json
 from typing import Optional, Sequence
 
 import numpy as np
@@ -158,12 +159,14 @@ class ServiceTimeTable:
             T=self.T,
             popc_T=self.popc_T if self.popc_T is not None else np.zeros(0),
             clock_hz=np.float64(self.clock_hz),
+            meta=np.str_(json.dumps(self.meta, default=float)),
         )
 
     @classmethod
     def load(cls, path: str) -> "ServiceTimeTable":
         z = np.load(path)
         popc = z["popc_T"]
+        meta = json.loads(str(z["meta"])) if "meta" in z.files else {}
         return cls(
             n_grid=z["n_grid"],
             e_grid=z["e_grid"],
@@ -171,6 +174,7 @@ class ServiceTimeTable:
             T=z["T"],
             popc_T=popc if popc.size else None,
             clock_hz=float(z["clock_hz"]),
+            meta=meta,
         )
 
 
@@ -218,7 +222,7 @@ class CoreUtilization:
 def derive_core_utilization(
     counters: Sequence[BasicCounters],
     table: ServiceTimeTable,
-    n_max: float = timing.V5E_SCATTER.n_max,
+    n_max: Optional[float] = None,
     use_true_n: bool = False,
 ) -> list[CoreUtilization]:
     """Paper Table 2, applied per core.
@@ -228,8 +232,12 @@ def derive_core_utilization(
     per-core counters.  With ``use_true_n`` the instrumented queue length
     replaces the occupancy-based estimate ``n_hat = o * n_max`` — the paper
     identifies the occupancy estimate as the cause of >100% utilization
-    readings.
+    readings.  ``n_max`` defaults to the table's own load axis upper bound
+    (the table is built once per device, so its grid *is* the device's
+    maximum in-flight job count).
     """
+    if n_max is None:
+        n_max = float(table.n_grid[-1])
     total_jobs = sum(cc.N_f + cc.N_c + cc.N_p for cc in counters)
     e_global = (sum(cc.O for cc in counters) / total_jobs) if total_jobs else 1.0
     out = []

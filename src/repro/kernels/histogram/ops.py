@@ -75,12 +75,19 @@ def histogram_instrumented(
     weighted: bool = False,
     num_cores: int = 8,
     interpret: bool = True,
+    waves_per_tile: Optional[int] = None,
+    pipeline_depth: int = 2,
 ) -> tuple[jnp.ndarray, counters_mod.WaveTrace]:
     """Histogram + the wave trace its instrumentation emits.
 
     The committed-index stream is identical for the weighted variant, so
     the integer instrumented kernel supplies the trace in both cases; only
     the job class differs (CAS for weighted f32 accumulation).
+
+    ``waves_per_tile``/``pipeline_depth`` describe the launch geometry the
+    occupancy model sees; ``waves_per_tile`` defaults to the kernel's own
+    tiling (``tile * channels / LANES``) and, when overridden, also governs
+    the round-robin core assignment — it *is* the scheduled tile size.
     """
     reorder = {"hist": False, "hist2": True}[variant]
     padded, pad = _pad(img.astype(jnp.int32), tile)
@@ -91,8 +98,9 @@ def histogram_instrumented(
         hist = hist.at[:, 0].add(-pad)
     deg = np.asarray(degrees).reshape(-1)
     num_waves = deg.shape[0]
-    waves_per_tile = (tile * img.shape[1]) // instr.LANES
-    tiles = np.arange(num_waves) // waves_per_tile
+    if waves_per_tile is None:
+        waves_per_tile = (tile * img.shape[1]) // instr.LANES
+    tiles = np.arange(num_waves) // max(waves_per_tile, 1)
     if weighted:
         job_class = timing.CAS
     elif force_fao:
@@ -105,6 +113,7 @@ def histogram_instrumented(
         core=(tiles % num_cores).astype(np.int32),
         lanes_active=np.full(num_waves, float(instr.LANES)),
         waves_per_tile=waves_per_tile,
+        pipeline_depth=pipeline_depth,
     )
     return hist, trace
 

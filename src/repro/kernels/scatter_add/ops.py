@@ -65,12 +65,18 @@ def instrumented_scatter_add(
     num_cores: int = 8,
     job_class: int = timing.FAO,
     interpret: bool = True,
+    waves_per_tile: int | None = None,
+    pipeline_depth: int = 2,
 ):
     """Scatter-add + the paper-Table-1 counters its instrumentation emits.
 
     Returns (out, counters) where counters has the basic quantities
     ``N`` (wave jobs), ``O`` (serialization transactions), per-wave
     ``degree``, and a ready-to-profile ``trace``.
+
+    ``waves_per_tile`` (default: the kernel tiling ``tile / LANES``) and
+    ``pipeline_depth`` set the trace's launch geometry directly — no
+    post-construction mutation needed.
     """
     del wave  # fixed at instr.LANES inside the kernel
     ids = jnp.asarray(ids).astype(jnp.int32).reshape(-1)
@@ -93,14 +99,16 @@ def instrumented_scatter_add(
                                      instrumented=True, interpret=interpret)
     deg = np.asarray(deg).reshape(-1)
     num_waves = deg.shape[0]
-    waves_per_tile = tile // instr.LANES
-    tiles = np.arange(num_waves) // waves_per_tile
+    if waves_per_tile is None:
+        waves_per_tile = tile // instr.LANES
+    tiles = np.arange(num_waves) // max(waves_per_tile, 1)
     trace = counters_mod.WaveTrace(
         degree=deg,
         job_class=np.full(num_waves, job_class, np.int32),
         core=(tiles % num_cores).astype(np.int32),
         lanes_active=np.full(num_waves, float(instr.LANES)),
         waves_per_tile=waves_per_tile,
+        pipeline_depth=pipeline_depth,
     )
     counters = {
         "N": float(num_waves),

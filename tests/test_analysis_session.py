@@ -1,0 +1,212 @@
+"""The repro.analysis session API: Device registry, WorkloadSpec, Session."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    Device,
+    Session,
+    WorkloadSpec,
+    get_device,
+)
+from repro.analysis import device as device_mod
+from repro.core import counters
+from repro.core.profiler import CacheModel
+
+
+@pytest.fixture
+def sess(tmp_path):
+    device_mod._TABLE_MEMO.clear()
+    return Session("v5e", cache_dir=tmp_path)
+
+
+def _solid(num_waves=64):
+    return np.zeros(num_waves * 1024, np.int64)
+
+
+def _uniform(num_waves=64, num_bins=256, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, num_bins, num_waves * 1024)
+
+
+# -- Device registry ----------------------------------------------------------
+
+
+def test_get_device_known_and_passthrough():
+    dev = get_device("v5e")
+    assert dev.name == "v5e"
+    assert get_device(dev) is dev
+
+
+def test_get_device_unknown_lists_registry():
+    with pytest.raises(KeyError, match="v5e"):
+        get_device("h100")
+
+
+def test_device_variant_with_():
+    dev = get_device("v5e").with_(cache=CacheModel(llc_bytes=1))
+    assert dev.cache.llc_bytes == 1
+    assert get_device("v5e").cache.llc_bytes != 1  # registry untouched
+
+
+def test_device_is_frozen():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        get_device("v5e").num_cores = 4
+
+
+# -- WorkloadSpec -------------------------------------------------------------
+
+
+def test_spec_requires_exactly_one_source():
+    with pytest.raises(ValueError, match="exactly one"):
+        WorkloadSpec(label="none")
+    tr = counters.trace_from_indices(_solid(2), 256)
+    with pytest.raises(ValueError, match="exactly one"):
+        WorkloadSpec(label="both", trace=tr, indices=_solid(2))
+
+
+def test_spec_is_frozen_and_with_derives():
+    spec = WorkloadSpec.from_indices(_solid(4), 256, label="a",
+                                     waves_per_tile=8)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.label = "b"
+    spec2 = spec.with_(label="b", waves_per_tile=16)
+    assert (spec.label, spec.waves_per_tile) == ("a", 8)
+    assert (spec2.label, spec2.waves_per_tile) == ("b", 16)
+
+
+def test_spec_resolve_trace_applies_geometry_without_mutation():
+    tr = counters.trace_from_indices(_solid(8), 256, waves_per_tile=4)
+    spec = WorkloadSpec.from_trace(tr, label="g", waves_per_tile=32,
+                                   pipeline_depth=4)
+    resolved = spec.resolve_trace()
+    assert (resolved.waves_per_tile, resolved.pipeline_depth) == (32, 4)
+    assert (tr.waves_per_tile, tr.pipeline_depth) == (4, 2)  # source intact
+    np.testing.assert_array_equal(resolved.degree, tr.degree)
+
+
+def test_spec_from_indices_defaults_bytes_read():
+    spec = WorkloadSpec.from_indices(_solid(4), 256, label="b")
+    assert spec.bytes_read == 4 * 1024 * 4
+
+
+# -- Session ------------------------------------------------------------------
+
+
+def test_session_profile_solid_vs_uniform(sess):
+    solid = sess.profile(WorkloadSpec.from_indices(
+        _solid(), 256, label="solid", waves_per_tile=32))
+    uniform = sess.profile(WorkloadSpec.from_indices(
+        _uniform(), 256, label="uniform", waves_per_tile=32))
+    assert solid.per_core[0].e > uniform.per_core[0].e
+    assert solid.scatter_utilization > uniform.scatter_utilization
+
+
+def test_session_uses_device_bundle(tmp_path):
+    device_mod._TABLE_MEMO.clear()
+    dev = get_device("v5e").with_(num_cores=2)
+    sess = Session(dev, cache_dir=tmp_path)
+    prof = sess.profile(WorkloadSpec.from_indices(
+        _solid(), 256, label="2core", waves_per_tile=32, num_cores=2))
+    assert len(prof.per_core) == 2
+
+
+def test_session_classify_and_speedup(sess):
+    verdict = sess.classify(WorkloadSpec.from_indices(
+        _solid(), 256, label="solid", waves_per_tile=32))
+    assert verdict.bottleneck == "scatter"
+    sp = sess.speedup(
+        WorkloadSpec.from_indices(_solid(), 256, label="before",
+                                  waves_per_tile=32),
+        WorkloadSpec.from_indices(_uniform(), 256, label="after",
+                                  waves_per_tile=32))
+    assert sp > 1.0  # de-conflicted stream must be faster
+
+
+def test_session_sweep_detects_shift(tmp_path):
+    """Growing working set + tiny LLC + low concurrency: scatter -> hbm."""
+    device_mod._TABLE_MEMO.clear()
+    dev = get_device("v5e").with_(cache=CacheModel(
+        llc_bytes=1 << 20, miss_latency_cycles=2000, hide_concurrency=64.0))
+    sess = Session(dev, cache_dir=tmp_path)
+    specs = [
+        WorkloadSpec.from_indices(
+            _uniform(num_waves=1 << p0, seed=p0), 256,
+            label=f"2^{p0 + 10}", waves_per_tile=2,
+            bytes_read=float((1 << p0) * 1024 * 4))
+        for p0 in range(2, 11)]
+    result = sess.sweep(specs)
+    assert len(result) == 9
+    assert len(result.verdicts) == 9
+    assert result.bottlenecks[0] == "scatter"
+    assert any(s.unit_after == "hbm" for s in result.shifts), \
+        result.bottlenecks
+    # sweep utilization arrays are aligned with the points
+    assert result.utilization["hbm"].shape == (9,)
+
+
+def test_sweep_requires_specs(sess):
+    with pytest.raises(ValueError):
+        sess.sweep([])
+
+
+# -- reporting ----------------------------------------------------------------
+
+
+def test_report_before_profile_raises(tmp_path):
+    device_mod._TABLE_MEMO.clear()
+    with pytest.raises(RuntimeError):
+        Session("v5e", cache_dir=tmp_path).report()
+
+
+def test_report_formats(sess):
+    specs = [WorkloadSpec.from_indices(_solid(), 256, label="solid",
+                                       waves_per_tile=32),
+             WorkloadSpec.from_indices(_uniform(), 256, label="uniform",
+                                       waves_per_tile=32)]
+    sess.sweep(specs)
+
+    text = sess.report()
+    assert "solid" in text and "uniform" in text and "v5e" in text
+
+    payload = json.loads(sess.report("json"))
+    assert payload["device"] == "v5e"
+    assert [p["label"] for p in payload["points"]] == ["solid", "uniform"]
+    assert {"bottleneck", "U_scatter", "U_hbm",
+            "speedup_vs_first"} <= set(payload["points"][0])
+
+    lines = sess.report("csv").strip().splitlines()
+    assert len(lines) == 3  # header + 2 points
+    assert lines[0].startswith("label,")
+
+    with pytest.raises(ValueError):
+        sess.report("yaml")
+
+
+# -- deprecation shims --------------------------------------------------------
+
+
+def test_old_core_imports_still_resolve():
+    from repro.core import (  # noqa: F401
+        CacheModel,
+        ServiceTimeTable,
+        WaveTrace,
+        build_table,
+        classify,
+        detect_shifts,
+        profile_scatter_workload,
+        trace_from_indices,
+    )
+
+
+def test_core_namespace_forwards_session_with_warning():
+    import repro.core as core
+    with pytest.warns(DeprecationWarning, match="repro.analysis"):
+        assert core.Session is Session
+    with pytest.warns(DeprecationWarning):
+        assert core.Device is Device
+    with pytest.raises(AttributeError):
+        core.not_a_real_name

@@ -1,0 +1,74 @@
+"""Shift detection + speedup estimation (paper §4.1) on synthetic profiles."""
+
+import numpy as np
+
+from repro.core import bottleneck
+from repro.core.profiler import UnitUtilization, WorkloadProfile
+
+
+def _prof(label, units, window=1000.0):
+    """Profile whose dominant unit is fully controlled by ``units``."""
+    return WorkloadProfile(
+        label=label,
+        per_core=[],
+        units=[UnitUtilization(n, busy, window) for n, busy in units.items()],
+        T_cycles=np.array([window]),
+    )
+
+
+def test_detect_shifts_empty_and_single():
+    assert bottleneck.detect_shifts([]) == []
+    assert bottleneck.detect_shifts([_prof("a", {"scatter": 900})]) == []
+
+
+def test_detect_shifts_no_shift_sweep():
+    profiles = [_prof(f"p{i}", {"scatter": 900 - i, "hbm": 100})
+                for i in range(5)]
+    assert bottleneck.detect_shifts(profiles) == []
+
+
+def test_detect_shifts_single_shift():
+    profiles = [
+        _prof("small", {"scatter": 900, "hbm": 100}),
+        _prof("large", {"scatter": 100, "hbm": 900}),
+    ]
+    [event] = bottleneck.detect_shifts(profiles)
+    assert event.index == 1
+    assert (event.unit_before, event.unit_after) == ("scatter", "hbm")
+    assert (event.label_before, event.label_after) == ("small", "large")
+
+
+def test_detect_shifts_multi_shift():
+    profiles = [
+        _prof("a", {"scatter": 900, "hbm": 100, "mxu": 50}),
+        _prof("b", {"scatter": 100, "hbm": 900, "mxu": 50}),
+        _prof("c", {"scatter": 100, "hbm": 100, "mxu": 950}),
+        _prof("d", {"scatter": 100, "hbm": 100, "mxu": 950}),
+    ]
+    events = bottleneck.detect_shifts(profiles)
+    assert [(e.index, e.unit_before, e.unit_after) for e in events] == [
+        (1, "scatter", "hbm"), (2, "hbm", "mxu")]
+
+
+def test_speedup_estimate_ratio():
+    before = _prof("before", {"scatter": 900}, window=2000.0)
+    after = _prof("after", {"scatter": 900}, window=500.0)
+    assert bottleneck.speedup_estimate(before, after) == 4.0
+
+
+def test_speedup_estimate_zero_window_guard():
+    before = _prof("before", {"scatter": 900}, window=2000.0)
+    degenerate = _prof("after", {}, window=0.0)
+    assert bottleneck.speedup_estimate(before, degenerate) == float("inf")
+
+
+def test_classify_underutilized_comment():
+    v = bottleneck.classify(_prof("idle", {"scatter": 100, "hbm": 50}))
+    assert not v.saturated
+    assert "no unit saturated" in v.comment
+
+
+def test_classify_leading_unsaturated():
+    v = bottleneck.classify(_prof("mid", {"scatter": 700, "hbm": 100}))
+    assert v.bottleneck == "scatter" and not v.saturated
+    assert "leading but unsaturated" in v.comment

@@ -102,8 +102,8 @@ def test_restore_with_shardings(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     t = _tree()
     store.save(str(tmp_path), 2, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch import mesh as mesh_mod
+    mesh = mesh_mod.compat_make_mesh((1,), ("data",))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
     restored, _ = store.restore(str(tmp_path), t, shardings=sh)
     assert restored["a"].sharding == NamedSharding(mesh, P())

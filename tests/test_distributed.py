@@ -24,13 +24,13 @@ def test_moe_ep_matches_local_oracle():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.models import moe
+from repro.launch import mesh as mesh_mod
 cfg = moe.MoEConfig(d_model=32, d_expert=16, num_experts=8, top_k=2,
                     capacity_factor=8.0, dtype="float32")
 p = moe.init(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32), jnp.float32)
 ref, _, _ = moe.apply_local(p, x.reshape(-1, 32), cfg)
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = mesh_mod.compat_make_mesh((2, 2, 2), ("pod", "data", "model"))
 with mesh:
     out, aux, disp = moe.apply_ep(p, x, cfg, mesh)
 err = np.abs(np.asarray(out).reshape(-1, 32) - np.asarray(ref)).max()
@@ -44,13 +44,13 @@ def test_moe_tp_ragged_matches_local_oracle():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.models import moe
+from repro.launch import mesh as mesh_mod
 cfg = moe.MoEConfig(d_model=32, d_expert=16, num_experts=4, top_k=2,
                     capacity_factor=8.0, dtype="float32")
 p = moe.init(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32), jnp.float32)
 ref, _, _ = moe.apply_local(p, x.reshape(-1, 32), cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = mesh_mod.compat_make_mesh((2, 4), ("data", "model"))
 with mesh:
     out, _, _ = moe.apply_sharded(p, x, cfg, mesh, data_axes=("data",))
 err = np.abs(np.asarray(out).reshape(-1, 32) - np.asarray(ref)).max()
@@ -66,6 +66,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.models.registry import build_model, make_batch
 from repro.parallel import ctx as pctx, sharding as shd
+from repro.launch import mesh as mesh_mod
 
 cfg = get_config("qwen2-72b").reduced()
 model = build_model(cfg)
@@ -73,8 +74,7 @@ params = model.init(jax.random.PRNGKey(0))
 batch = make_batch(cfg, 8, 32)
 loss0, _ = jax.jit(lambda p, b: model.loss(p, b))(params, batch)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = mesh_mod.compat_make_mesh((2, 4), ("data", "model"))
 psh = shd.param_shardings(params, cfg, mesh)
 params_s = jax.device_put(params, psh)
 bsh = jax.tree.map(lambda x: NamedSharding(mesh, P(("data",))), batch)
@@ -96,14 +96,14 @@ from repro.launch import specs as specs_mod
 from repro.models.registry import build_model
 from repro.optim import adamw
 from repro.parallel import ctx as pctx
+from repro.launch import mesh as mesh_mod
 from repro.train import step as train_mod
 import dataclasses
 
 cfg = get_config("granite-moe-1b-a400m").reduced()
 cfg = dataclasses.replace(cfg, dtype="bfloat16")
 model = build_model(cfg)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = mesh_mod.compat_make_mesh((4, 2), ("data", "model"))
 with pctx.use_mesh(mesh, data_axes=("data",), tp_axis="model"):
     tcfg = train_mod.TrainConfig(accum_steps=2)
     step = train_mod.make_train_step(model, tcfg, adamw.AdamWConfig())

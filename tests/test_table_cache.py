@@ -1,0 +1,130 @@
+"""ServiceTimeTable (de)serialization + the per-device .npz table cache."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis import device as device_mod
+from repro.analysis.device import Device, get_device
+from repro.core import microbench, qmodel, timing
+
+
+@pytest.fixture(autouse=True)
+def _clean_memo():
+    """Each test sees a cold in-process memo (disk state is per-tmpdir)."""
+    device_mod._TABLE_MEMO.clear()
+    yield
+    device_mod._TABLE_MEMO.clear()
+
+
+def test_save_load_round_trip(tmp_path):
+    tab = microbench.build_table()
+    path = str(tmp_path / "t.npz")
+    tab.save(path)
+    back = qmodel.ServiceTimeTable.load(path)
+    np.testing.assert_array_equal(back.n_grid, tab.n_grid)
+    np.testing.assert_array_equal(back.e_grid, tab.e_grid)
+    np.testing.assert_array_equal(back.cfrac_grid, tab.cfrac_grid)
+    np.testing.assert_array_equal(back.T, tab.T)
+    np.testing.assert_array_equal(back.popc_T, tab.popc_T)
+    assert back.clock_hz == tab.clock_hz
+    # meta survives the round trip (mode + calibration constants)
+    assert back.meta["mode"] == "analytic"
+    assert back.meta["params"]["n_max"] == timing.V5E_SCATTER.n_max
+    # interpolated lookups are identical
+    q = [(1, 1, 0), (17.5, 8.3, 4.2), (64, 32, 64)]
+    for n, e, c in q:
+        np.testing.assert_allclose(back.service_time(n, e, c),
+                                   tab.service_time(n, e, c))
+
+
+def test_save_load_without_popc(tmp_path):
+    tab = microbench.build_table()
+    tab2 = qmodel.ServiceTimeTable(
+        n_grid=tab.n_grid, e_grid=tab.e_grid, cfrac_grid=tab.cfrac_grid,
+        T=tab.T, popc_T=None)
+    path = str(tmp_path / "nopopc.npz")
+    tab2.save(path)
+    back = qmodel.ServiceTimeTable.load(path)
+    assert back.popc_T is None
+    with pytest.raises(ValueError):
+        back.popc_service_time(4, 2)
+
+
+def test_device_table_builds_then_loads_from_disk(tmp_path, monkeypatch):
+    dev = get_device("v5e")
+    calls = {"n": 0}
+    real_build = microbench.build_table
+
+    def counting_build(*a, **kw):
+        calls["n"] += 1
+        return real_build(*a, **kw)
+
+    monkeypatch.setattr(microbench, "build_table", counting_build)
+    t1 = dev.table(cache_dir=tmp_path)
+    assert calls["n"] == 1
+    assert dev.table_path(tmp_path).exists()
+    assert t1.meta["device"] == "v5e"
+
+    # cold memo: second resolution must hit the .npz, not rebuild
+    device_mod._TABLE_MEMO.clear()
+    t2 = dev.table(cache_dir=tmp_path)
+    assert calls["n"] == 1
+    np.testing.assert_array_equal(t1.T, t2.T)
+
+    # warm memo: no disk access path needed either
+    t3 = dev.table(cache_dir=tmp_path)
+    assert t3 is t2
+
+
+def test_device_table_refresh_rebuilds(tmp_path, monkeypatch):
+    dev = get_device("v5e")
+    calls = {"n": 0}
+    real_build = microbench.build_table
+
+    def counting_build(*a, **kw):
+        calls["n"] += 1
+        return real_build(*a, **kw)
+
+    monkeypatch.setattr(microbench, "build_table", counting_build)
+    dev.table(cache_dir=tmp_path)
+    dev.table(cache_dir=tmp_path, refresh=True)
+    assert calls["n"] == 2
+
+
+def test_device_table_corrupt_cache_falls_back_to_build(tmp_path):
+    dev = get_device("v5e")
+    path = dev.table_path(tmp_path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_bytes(b"not an npz")
+    tab = dev.table(cache_dir=tmp_path)
+    assert tab.T.shape[0] == timing.V5E_SCATTER.n_max + 1
+
+
+def test_table_key_tracks_calibration():
+    base = get_device("v5e")
+    tweaked = base.with_(scatter=dataclasses.replace(
+        base.scatter, cas_base=base.scatter.cas_base + 1.0))
+    assert base.table_key() != tweaked.table_key()
+    # different devices never collide either
+    assert get_device("v5p").table_key() != base.table_key()
+
+
+def test_devices_share_table_across_sessions(tmp_path, monkeypatch):
+    """The acceptance path: two Sessions, one build."""
+    from repro.analysis import Session
+
+    calls = {"n": 0}
+    real_build = microbench.build_table
+
+    def counting_build(*a, **kw):
+        calls["n"] += 1
+        return real_build(*a, **kw)
+
+    monkeypatch.setattr(microbench, "build_table", counting_build)
+    s1 = Session("v5e", cache_dir=tmp_path)
+    device_mod._TABLE_MEMO.clear()   # simulate a fresh process
+    s2 = Session("v5e", cache_dir=tmp_path)
+    assert calls["n"] == 1
+    np.testing.assert_array_equal(s1.table.T, s2.table.T)
