@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows (spec format):
                                 (paper Fig 3, v5e-adapted)
   * fig4_popc_vs_fao          — instruction-class effect (paper Fig 4)
   * fig5_reorder_speedup      — hist2-vs-hist predicted speedup (paper Fig 5)
+  * sec5_model_vs_measured    — trace-vs-kernel provider counter validation
+                                (paper §5) + acquisition-cost asymmetry
   * moe_dispatch_profile      — router balance -> scatter-unit utilization
                                 (framework integration of the model)
   * kernel_walltime           — interpret-mode Pallas kernel wall times
@@ -101,7 +103,7 @@ def fig3_utilization_sweep() -> None:
             us = (time.perf_counter() - t0) * 1e6
             emit(f"fig3_utilization_{kind}_2^{p}", us,
                  f"U={prof.scatter_utilization:.3f};"
-                 f"e={prof.per_core[0].e:.2f};"
+                 f"e={prof.e:.2f};"
                  f"bottleneck={prof.bottleneck}")
 
 
@@ -138,8 +140,29 @@ def moe_dispatch_profile() -> None:
             bytes_read=float(n_tokens * 4))
         prof = session().profile(spec)
         emit(f"moe_dispatch_{label}", 0.0,
-             f"e={prof.per_core[0].e:.2f};U={prof.scatter_utilization:.3f};"
+             f"e={prof.e:.2f};U={prof.scatter_utilization:.3f};"
              f"bottleneck={prof.bottleneck}")
+
+
+def sec5_model_vs_measured() -> None:
+    """Paper §5 validation: trace-provider counters vs instrumented-kernel
+    counters on the histogram case, plus the acquisition-cost asymmetry
+    (the modeled path must be far cheaper than an interpret-mode run)."""
+    img = jnp.asarray(make_image("solid", 1 << 16))
+    spec = WorkloadSpec.from_histogram(
+        img, label="solid-64Kpx", force_fao=True, waves_per_tile=32,
+        bytes_read=float((1 << 16) * 4))
+    sess = session()
+    t0 = time.perf_counter()
+    report = sess.validate(spec, providers=("trace", "kernel"))
+    us = (time.perf_counter() - t0) * 1e6
+    us_trace = _timeit(lambda: sess.collect(spec, provider="trace"), 1)
+    us_kernel = _timeit(lambda: sess.collect(spec, provider="kernel"), 1)
+    emit("sec5_model_vs_measured", us,
+         f"e_rel_err={report.rel_err('kernel', 'e'):.4f};"
+         f"max_rel_err={report.max_rel_err:.4f};"
+         f"trace_us={us_trace:.0f};kernel_us={us_kernel:.0f};"
+         f"speedup={us_kernel / max(us_trace, 1e-9):.1f}x")
 
 
 def kernel_walltime() -> None:
@@ -182,8 +205,8 @@ def roofline_table() -> None:
 
 
 ALL = [fig1_service_time_table, fig3_utilization_sweep, fig4_popc_vs_fao,
-       fig5_reorder_speedup, moe_dispatch_profile, kernel_walltime,
-       roofline_table]
+       fig5_reorder_speedup, sec5_model_vs_measured, moe_dispatch_profile,
+       kernel_walltime, roofline_table]
 
 
 def main() -> None:

@@ -56,7 +56,7 @@ def main():
                     prof = sess.profile(spec)
                     rows.append(
                         f"{kind},{variant},{n},{wpt},"
-                        f"{prof.per_core[0].e:.2f},"
+                        f"{prof.e:.2f},"
                         f"{prof.scatter_utilization:.4f},{prof.bottleneck}")
                     if kind == "uniform" and variant == "hist" and wpt == 8:
                         shift_profiles.append(prof)

@@ -24,7 +24,10 @@ from repro.configs import get_config
 from repro.models import moe
 from repro.models.registry import build_model, make_batch
 
-SESSION = Session(device="v5e")
+# provider="kernel": counters come from the instrumented Pallas
+# scatter-add launch itself, not from a host-synthesized trace — this is
+# a *live* router, so measure it
+SESSION = Session(device="v5e", provider="kernel")
 
 
 def profile_dispatch(ids: np.ndarray, num_experts: int, label: str):
@@ -33,7 +36,7 @@ def profile_dispatch(ids: np.ndarray, num_experts: int, label: str):
         num_experts, label=label, waves_per_tile=32)
     prof = SESSION.profile(spec)
     v = SESSION.last.verdicts[0]
-    print(f"  {label:24s} e={prof.per_core[0].e:5.2f} "
+    print(f"  {label:24s} e={prof.e:5.2f} "
           f"U={prof.scatter_utilization:6.2%}  {v.comment}")
     return prof
 

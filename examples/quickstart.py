@@ -7,6 +7,9 @@
    histogram launch declaratively (no trace mutation, no kwarg sprawl).
 3. ``sess.profile(spec)`` / ``sess.classify(spec)`` — Tool 2: per-core
    utilization + the bottleneck verdict.
+4. ``sess.validate(spec)`` — the paper's §5 check: the modeled counter
+   path ("trace" provider) against the measured one ("kernel" provider,
+   counters read back from the instrumented Pallas launch).
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -51,13 +54,22 @@ def main():
                                          force_fao=True, waves_per_tile=32)
              for v in ("hist", "hist2")]
     result = sess.sweep(specs)
-    e0 = result.profiles[0].per_core[0].e
-    e1 = result.profiles[1].per_core[0].e
+    e0 = result.profiles[0].e
+    e1 = result.profiles[1].e
     print(f"channel reorder on solid: e {e0:.0f} -> {e1:.0f}, "
           f"predicted speedup {float(result.speedup_vs_first[1]):.2f}x "
           f"(paper: ~30% on large monochrome images)")
     print()
     print(sess.report())
+
+    # Model vs measured (paper §5): the default "trace" provider
+    # synthesizes the committed index stream on the host; the "kernel"
+    # provider runs the instrumented Pallas kernel and reads the counters
+    # back.  They must agree exactly.
+    small = jnp.asarray(make_image("solid", 1 << 14))
+    spec = WorkloadSpec.from_histogram(small, label="solid 16Kpx",
+                                       force_fao=True, waves_per_tile=32)
+    print(sess.validate(spec, providers=("trace", "kernel")).render())
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Public analysis API: Device registry + WorkloadSpec + Session.
+"""Public analysis API: Device + provider registries, WorkloadSpec, Session.
 
 The two paper tools in five lines:
 
@@ -7,6 +7,11 @@ The two paper tools in five lines:
     spec = WorkloadSpec.from_histogram(img, label="solid 256Kpx",
                                        waves_per_tile=32)
     print(sess.classify(spec).comment)      # Tool 2: utilization -> verdict
+
+Counter acquisition is pluggable: ``Session(provider="kernel")`` reads
+counters back from the interpret-mode instrumented Pallas kernels instead
+of synthesizing the trace, and ``sess.validate(spec)`` compares the two —
+the paper's §5 model-vs-measured validation as one call.
 
 Older entry points (``repro.core.microbench.build_table`` +
 ``repro.core.profiler.profile_scatter_workload``) remain available but are
@@ -20,5 +25,21 @@ from repro.analysis.device import (  # noqa: F401
     get_device,
     register_device,
 )
-from repro.analysis.workload import WorkloadSpec  # noqa: F401
-from repro.analysis.session import Session, SweepResult  # noqa: F401
+from repro.analysis.providers import (  # noqa: F401
+    PROVIDERS,
+    CounterProvider,
+    CounterSet,
+    HloProvider,
+    InstrumentedKernelProvider,
+    MicrobenchProvider,
+    TraceProvider,
+    get_provider,
+    register_provider,
+)
+from repro.analysis.workload import KernelSource, WorkloadSpec  # noqa: F401
+from repro.analysis.session import (  # noqa: F401
+    ProviderComparison,
+    Session,
+    SweepResult,
+    ValidationReport,
+)

@@ -1,0 +1,78 @@
+"""CounterProvider protocol + registry (the acquisition layer's contract).
+
+The paper's pipeline is "performance counters -> queuing model ->
+utilization verdict", and its validation (§5) hinges on comparing
+*modeled* against *measured* counters.  A ``CounterProvider`` is one
+counter source: it consumes a ``WorkloadSpec`` + ``Device`` and returns a
+uniform ``repro.core.counters.CounterSet``, so every downstream consumer
+(``profile_counters``, ``Session``, ``Session.validate``) is agnostic to
+where the numbers came from.
+
+Four providers ship, registered under the names the ``Session``
+constructor accepts:
+
+    ``trace``      — synthesize the committed index stream in numpy and
+                     derive counters from it (the modeled path; default)
+    ``kernel``     — run the interpret-mode instrumented Pallas kernel
+                     and read ``wave_degrees``/``wave_active`` back (the
+                     measured path)
+    ``hlo``        — derive bytes/FLOPs/collective traffic from a
+                     compiled artifact or HLO text (no scatter counters)
+    ``microbench`` — trace counters plus a timing-model wall-time, the
+                     container's stand-in for wall-clock measurement
+
+The registry mirrors the device registry: look up by name with
+``get_provider`` (instances pass through), extend with
+``register_provider`` — e.g. a future hardware-counter provider on a
+real TPU registers here and every Session feature works unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Union, runtime_checkable
+
+from repro.core.counters import CounterSet
+
+
+@runtime_checkable
+class CounterProvider(Protocol):
+    """One counter-acquisition backend (see module docstring)."""
+
+    name: str
+
+    def collect(self, spec, device) -> CounterSet:
+        """Acquire the spec's counters on the given device bundle."""
+        ...
+
+
+PROVIDERS: dict[str, CounterProvider] = {}
+
+
+def register_provider(provider: CounterProvider) -> CounterProvider:
+    """Register a provider instance under ``provider.name``.
+
+    Providers are stateless; one shared instance per name is registered
+    (mirroring ``repro.analysis.register_device``).  Returns the provider
+    so the call can decorate a module-level instantiation.
+    """
+    PROVIDERS[provider.name] = provider
+    return provider
+
+
+def get_provider(
+    name_or_provider: Union[str, CounterProvider],
+) -> CounterProvider:
+    """Look up a registry entry; a provider instance passes through."""
+    if not isinstance(name_or_provider, str):
+        if isinstance(name_or_provider, CounterProvider):
+            return name_or_provider
+        raise TypeError(f"not a CounterProvider: {name_or_provider!r} "
+                        f"(needs .name and .collect(spec, device))")
+    try:
+        return PROVIDERS[name_or_provider]
+    except KeyError:
+        known = ", ".join(sorted(PROVIDERS))
+        raise KeyError(
+            f"unknown provider {name_or_provider!r}; registered: {known}. "
+            f"Use repro.analysis.register_provider() for custom sources."
+        ) from None

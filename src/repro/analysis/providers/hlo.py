@@ -1,0 +1,59 @@
+"""HloProvider: roofline counters from a compiled step (dry-run path).
+
+The scatter unit needs runtime data (it is data-dependent — that is the
+paper's point), so this provider reports only the static side: FLOPs and
+HBM bytes via ``compiled.cost_analysis()`` (or the trip-count-aware
+``hlo.analyze_module`` walk when only module text is available) and
+per-link collective wire traffic from the post-SPMD HLO text.  The
+returned ``CounterSet`` has empty scatter counters; ``profile_counters``
+then reports the three throughput servers (HBM/MXU/ICI) with an empty
+per-core table.  Pair it with a trace/kernel collection of the same step
+when the scatter verdict is also needed.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.providers.base import register_provider
+from repro.core.counters import CounterSet
+
+
+class HloProvider:
+    """Bytes/FLOPs/collective counters from compiled HLO."""
+
+    name = "hlo"
+
+    def collect(self, spec, device) -> CounterSet:
+        from repro.core import hlo as hlo_mod  # lazy: keeps import light
+
+        del device  # cost extraction is device-independent
+        meta: dict = {}
+        if spec.compiled is not None:
+            flops, nbytes = hlo_mod.flops_and_bytes(spec.compiled)
+            text = spec.hlo_text
+            if text is None:
+                text = spec.compiled.as_text()
+            coll = hlo_mod.parse_collectives(text, spec.num_devices)
+            wire = float(coll.total_wire_bytes)
+            meta["collectives"] = coll.by_opcode()
+        elif spec.hlo_text is not None:
+            cost = hlo_mod.analyze_module(spec.hlo_text, spec.num_devices)
+            flops, nbytes = float(cost.flops), float(cost.bytes)
+            wire = float(cost.collective_wire_bytes)
+            meta["unresolved_loops"] = cost.unresolved_loops
+        else:
+            raise ValueError(
+                f"WorkloadSpec {spec.label!r} has no compiled/HLO source — "
+                f"build it with WorkloadSpec.from_compiled(...)")
+        # Whole-step artifacts are per-chip quantities: report against one
+        # core so profile_counters does not dilute them by a core count the
+        # compiler already accounted for.  A nonzero bytes_read/flops on
+        # the spec is a caller override of the cost analysis — honor it,
+        # as the other providers honor the same roofline-side fields.
+        return CounterSet(
+            label=spec.label, source=self.name, num_cores=1,
+            bytes_read=spec.bytes_read or nbytes,
+            flops=spec.flops or flops, ici_bytes=wire,
+            overhead_cycles=spec.overhead_cycles, meta=meta)
+
+
+register_provider(HloProvider())

@@ -1,0 +1,54 @@
+"""MicrobenchProvider: trace counters plus a measured-service-time clock.
+
+The paper's validation compares the queue model's prediction against a
+*timed* run.  On hardware this provider would wall-clock the launch; in
+this CPU container wall-clocking an interpret-mode Pallas run would time
+the Python interpreter (see ``core.timing``), so the calibrated timing
+model prices the counted ``(n, e, c)`` directly — exactly what
+``core.microbench`` does in ``analytic`` mode when building Tool 1's
+table.  The point is the *shape*: downstream consumers get a
+``wall_time_s`` that came from the measurement side, not from the
+service-time table the model interpolates, so ``Session.validate`` has an
+independent time axis to compare against.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.providers.base import register_provider
+from repro.analysis.providers.trace import TraceProvider
+from repro.core import timing
+from repro.core.counters import CounterSet
+
+
+class MicrobenchProvider(TraceProvider):
+    """Trace counters + timing-model wall time (measured-side stand-in)."""
+
+    name = "microbench"
+
+    def collect(self, spec, device) -> CounterSet:
+        cset = super().collect(spec, device)
+        params = device.scatter
+        n_hat = cset.occupancy(params.n_max) * params.n_max
+        e = cset.e
+        # Price each core's jobs in batches of n_hat through the timing
+        # model: busy ~= N * T(n_hat, e, c, p) / n_hat (paper Eq. 3).
+        busy = np.zeros(cset.num_cores)
+        for core in range(cset.num_cores):
+            n_jobs = float(cset.N[core])
+            if n_jobs == 0 or n_hat <= 0:
+                continue
+            c_share = n_hat * (cset.N_c[core] / n_jobs)
+            p_share = n_hat * (cset.N_p[core] / n_jobs)
+            t_batch = float(timing.total_time_cycles(
+                n_hat, e, c_share, p_share, params))
+            busy[core] = n_jobs * t_batch / n_hat
+        # source is already "microbench": the inherited collect stamps
+        # self.name
+        cset.wall_time_s = float(np.max(busy)) / params.clock_hz
+        cset.meta["busy_cycles_measured"] = busy.tolist()
+        return cset
+
+
+register_provider(MicrobenchProvider())

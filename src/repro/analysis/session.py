@@ -3,13 +3,21 @@
 The paper promises a user can "immediately determine if shared-memory
 atomic operations are a bottleneck".  A ``Session`` is that promise as an
 API: it owns a ``Device`` (and therefore the cached service-time table)
-and turns ``WorkloadSpec``s into profiles, sweeps, shift reports, and
-renderable verdicts:
+plus a ``CounterProvider`` (how counters are acquired), and turns
+``WorkloadSpec``s into profiles, sweeps, shift reports, and renderable
+verdicts:
 
-    sess = Session(device="v5e")
+    sess = Session(device="v5e")              # counters via "trace"
     prof = sess.profile(spec)                 # one launch
     result = sess.sweep([spec_1, ..., spec_k])  # a parameter sweep
     print(sess.report())                      # text | json | csv
+
+    Session(device="v5e", provider="kernel")  # counters from the
+                                              # instrumented Pallas run
+
+``validate`` is the paper's §5 as an API call: collect the same spec
+through several providers (modeled vs measured) and report per-counter
+relative errors and the utilization delta.
 """
 
 from __future__ import annotations
@@ -23,8 +31,10 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from repro.analysis.device import Device, get_device
+from repro.analysis.providers import CounterProvider, get_provider
 from repro.analysis.workload import WorkloadSpec
 from repro.core import bottleneck, profiler, qmodel
+from repro.core.counters import CounterSet
 
 
 @dataclasses.dataclass
@@ -49,7 +59,13 @@ class SweepResult:
     # -- renderers --------------------------------------------------------
 
     def to_rows(self) -> list[dict]:
-        """One flat record per sweep point (the csv/json payload)."""
+        """One flat record per sweep point (the csv/json payload).
+
+        ``e`` is the job-weighted mean across cores (matching the global
+        ``e = O / N`` of ``CounterSet``/``validate``) and ``n_hat`` the
+        max (the profile's peak concurrency estimate) — a multi-core
+        profile must not be reported from core 0 alone.
+        """
         rows = []
         for i, (p, v) in enumerate(zip(self.profiles, self.verdicts)):
             row = {
@@ -59,8 +75,8 @@ class SweepResult:
                 "comment": v.comment,
                 "scatter_model_U": p.scatter_utilization,
                 "speedup_vs_first": float(self.speedup_vs_first[i]),
-                "e": p.per_core[0].e if p.per_core else 0.0,
-                "n_hat": p.per_core[0].n_hat if p.per_core else 0.0,
+                "e": p.e,
+                "n_hat": p.n_hat,
             }
             for u in p.units:
                 row[f"U_{u.name}"] = u.utilization
@@ -86,24 +102,102 @@ class SweepResult:
             return buf.getvalue()
         if fmt == "text":
             buf = io.StringIO()
-            buf.write(f"== sweep on {self.device.name} "
-                      f"({len(self.profiles)} points) ==\n")
+            multi = len(self.profiles) > 1
+            head = "sweep" if multi else "profile"
+            buf.write(f"== {head} on {self.device.name} "
+                      f"({len(self.profiles)} point"
+                      f"{'s' if multi else ''}) ==\n")
             for row in self.to_rows():
                 units = "  ".join(
                     f"{k[2:]}={row[k]:6.2%}" for k in row if k.startswith("U_"))
                 buf.write(f"{row['label']:>28}  {units}  "
                           f"-> {row['bottleneck']}"
                           f"{' (saturated)' if row['saturated'] else ''}\n")
-            if self.shifts:
-                for s in self.shifts:
-                    buf.write(f"bottleneck shift at point {s.index}: "
-                              f"{s.unit_before} -> {s.unit_after} "
-                              f"({s.label_before} -> {s.label_after})\n")
-            else:
-                buf.write("no bottleneck shifts in sweep\n")
+            # shift lines are sweep properties: meaningless for one point
+            if multi:
+                if self.shifts:
+                    for s in self.shifts:
+                        buf.write(f"bottleneck shift at point {s.index}: "
+                                  f"{s.unit_before} -> {s.unit_after} "
+                                  f"({s.label_before} -> {s.label_after})\n")
+                else:
+                    buf.write("no bottleneck shifts in sweep\n")
             return buf.getvalue()
         raise ValueError(f"unknown report format {fmt!r} "
                          "(expected 'text', 'json' or 'csv')")
+
+
+@dataclasses.dataclass
+class ProviderComparison:
+    """One provider's counters + errors relative to the reference."""
+
+    provider: str
+    counters: dict               # N, O, e, n_hat, U
+    rel_err: dict                # same keys, |x - ref| / |ref|
+    utilization_delta: float     # U - U_ref (signed)
+    wall_time_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ValidationReport:
+    """Model-vs-measured counter comparison (paper §5 as an API call)."""
+
+    device: str
+    label: str
+    reference: str                         # provider name errors are vs
+    comparisons: list[ProviderComparison]
+
+    @property
+    def max_rel_err(self) -> float:
+        return max((e for c in self.comparisons
+                    for e in c.rel_err.values()), default=0.0)
+
+    def rel_err(self, provider: str, counter: str) -> float:
+        for c in self.comparisons:
+            if c.provider == provider:
+                return c.rel_err[counter]
+        raise KeyError(provider)
+
+    def to_dict(self) -> dict:
+        def finite(v):
+            # a zero reference with a nonzero counter yields rel_err=inf;
+            # JSON has no Infinity, so emit null there
+            if isinstance(v, float) and not np.isfinite(v):
+                return None
+            return v
+
+        comparisons = []
+        for c in self.comparisons:
+            d = dataclasses.asdict(c)
+            d["rel_err"] = {k: finite(v) for k, v in d["rel_err"].items()}
+            comparisons.append(d)
+        return {
+            "device": self.device, "label": self.label,
+            "reference": self.reference, "comparisons": comparisons,
+        }
+
+    def render(self, fmt: str = "text") -> str:
+        if fmt == "json":
+            return json.dumps(self.to_dict(), indent=2)
+        if fmt != "text":
+            raise ValueError(f"unknown report format {fmt!r} "
+                             "(expected 'text' or 'json')")
+        buf = io.StringIO()
+        buf.write(f"== validation: {self.label} on {self.device} "
+                  f"(reference: {self.reference}) ==\n")
+        keys = list(self.comparisons[0].counters) if self.comparisons else []
+        buf.write(f"{'provider':>12}  "
+                  + "  ".join(f"{k:>12}" for k in keys) + "\n")
+        for c in self.comparisons:
+            buf.write(f"{c.provider:>12}  "
+                      + "  ".join(f"{c.counters[k]:>12.4g}" for k in keys)
+                      + "\n")
+            if c.provider != self.reference:
+                buf.write(f"{'rel err':>12}  "
+                          + "  ".join(f"{c.rel_err[k]:>12.2%}" for k in keys)
+                          + "\n")
+        buf.write(f"max relative error: {self.max_rel_err:.2%}\n")
+        return buf.getvalue()
 
 
 class Session:
@@ -111,19 +205,30 @@ class Session:
 
     Tool 1 (the per-device table) runs implicitly — construction resolves
     the device's cached ``ServiceTimeTable``, building it only on first
-    ever use.  Tool 2 is ``profile``/``sweep``.
+    ever use.  Tool 2 is ``profile``/``sweep``, with counters acquired by
+    ``provider`` (a registry name or a ``CounterProvider`` instance;
+    default ``"trace"``, the modeled path).
     """
 
     def __init__(self, device: Union[str, Device] = "v5e", *,
                  table: Optional[qmodel.ServiceTimeTable] = None,
-                 cache_dir=None, use_true_n: bool = False) -> None:
+                 cache_dir=None, use_true_n: bool = False,
+                 provider: Union[str, CounterProvider] = "trace") -> None:
         self.device = get_device(device)
+        self.provider = get_provider(provider)
         self.table = table if table is not None \
             else self.device.table(cache_dir)
         self.use_true_n = use_true_n
         self._last: Optional[SweepResult] = None
 
     # -- the pipeline -----------------------------------------------------
+
+    def collect(self, spec: WorkloadSpec,
+                provider: Union[str, CounterProvider, None] = None,
+                ) -> CounterSet:
+        """Acquire the spec's counters (this session's provider by default)."""
+        prov = self.provider if provider is None else get_provider(provider)
+        return prov.collect(spec, self.device)
 
     def profile(self, spec: WorkloadSpec) -> profiler.WorkloadProfile:
         """Run one spec through counters -> queue model -> utilization."""
@@ -146,9 +251,56 @@ class Session:
         return self._last
 
     def speedup(self, before: WorkloadSpec, after: WorkloadSpec) -> float:
-        """Predicted speedup of ``after`` over ``before``."""
-        return bottleneck.speedup_estimate(self._profile_only(before),
-                                           self._profile_only(after))
+        """Predicted speedup of ``after`` over ``before``.
+
+        Records both profiles as the session's last result, so a
+        following ``report()`` shows the pair (not a stale earlier run).
+        """
+        result = self.sweep([before, after])
+        return float(result.speedup_vs_first[1])
+
+    def validate(self, spec: WorkloadSpec,
+                 providers: Sequence[Union[str, CounterProvider]] = (
+                     "trace", "kernel"),
+                 ) -> ValidationReport:
+        """Collect one spec through several providers and compare counters.
+
+        The paper's §5 validation as a first-class call: the first
+        provider is the reference (modeled), the rest are compared against
+        it with per-counter relative errors (``N``, ``O``, ``e``,
+        ``n_hat``) and the scatter-utilization delta.
+        """
+        provs = [get_provider(p) for p in providers]
+        if len(provs) < 2:
+            raise ValueError("validate() needs at least two providers")
+        csets = [p.collect(spec, self.device) for p in provs]
+        profiles = [self._profile_counters(c) for c in csets]
+
+        def numbers(cset: CounterSet, prof) -> dict:
+            return {
+                "N": cset.total_jobs,
+                "O": cset.total_O,
+                "e": cset.e,
+                "n_hat": prof.n_hat,
+                "U": prof.scatter_utilization,
+            }
+
+        ref = numbers(csets[0], profiles[0])
+        comparisons = []
+        for prov, cset, prof in zip(provs, csets, profiles):
+            got = numbers(cset, prof)
+            rel = {
+                k: (abs(got[k] - ref[k]) / abs(ref[k]) if ref[k]
+                    else (0.0 if got[k] == ref[k] else float("inf")))
+                for k in ref
+            }
+            comparisons.append(ProviderComparison(
+                provider=prov.name, counters=got, rel_err=rel,
+                utilization_delta=got["U"] - ref["U"],
+                wall_time_s=cset.wall_time_s))
+        return ValidationReport(
+            device=self.device.name, label=spec.label,
+            reference=provs[0].name, comparisons=comparisons)
 
     # -- reporting --------------------------------------------------------
 
@@ -165,19 +317,17 @@ class Session:
 
     # -- internals --------------------------------------------------------
 
-    def _profile_only(self, spec: WorkloadSpec) -> profiler.WorkloadProfile:
-        return profiler.profile_scatter_workload(
-            spec.resolve_trace(), self.table,
-            label=spec.label,
-            bytes_read=spec.bytes_read,
-            flops=spec.flops,
-            num_cores=spec.num_cores,
-            overhead_cycles=spec.overhead_cycles,
+    def _profile_counters(self, cset: CounterSet) -> profiler.WorkloadProfile:
+        return profiler.profile_counters(
+            cset, self.table,
             params=self.device.scatter,
             chip=self.device.chip,
             cache=self.device.cache,
             use_true_n=self.use_true_n,
         )
+
+    def _profile_only(self, spec: WorkloadSpec) -> profiler.WorkloadProfile:
+        return self._profile_counters(self.collect(spec))
 
     def _as_result(self, specs, profiles) -> SweepResult:
         verdicts = [bottleneck.classify(p) for p in profiles]

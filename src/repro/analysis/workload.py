@@ -4,10 +4,19 @@ The old call path required the caller to (a) run an instrumented kernel,
 (b) mutate ``trace.waves_per_tile`` after the fact, and (c) thread 11
 kwargs into ``profiler.profile_scatter_workload``.  A ``WorkloadSpec``
 captures all of that declaratively: what runs (an index stream, an
-existing wave trace, or an instrumented kernel launch), under which launch
-geometry, and with which roofline-side inputs (bytes read, FLOPs,
-overhead).  Specs are frozen — sweeps derive variants with ``with_()``
-instead of mutating shared state.
+existing wave trace, a described kernel launch, or a compiled artifact),
+under which launch geometry, and with which roofline-side inputs (bytes
+read, FLOPs, overhead).  Specs are frozen — sweeps derive variants with
+``with_()`` instead of mutating shared state.
+
+A spec is deliberately *provider-agnostic*: it describes the workload,
+not how its counters are acquired.  ``KernelSource`` keeps the kernel
+launch as data (op name + arguments) rather than a baked closure, so the
+``repro.analysis.providers`` backends can either synthesize the committed
+index stream in numpy (``TraceProvider``) or actually run the
+interpret-mode Pallas kernel (``InstrumentedKernelProvider``) from one
+and the same spec — the model-vs-measured split the paper's validation
+(§5) needs.
 """
 
 from __future__ import annotations
@@ -22,21 +31,42 @@ from repro.core import timing
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelSource:
+    """A described (not yet launched) instrumented-kernel source.
+
+    ``op`` names the kernel family (``"histogram"`` | ``"scatter_add"``);
+    ``params`` holds its source-specific arguments (image / ids / values /
+    bins).  Launch geometry lives on the owning ``WorkloadSpec`` so
+    ``with_()`` derivations apply to the launch too.
+    """
+
+    op: str
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
     """One profileable launch: measurement source + geometry + roofline.
 
-    Exactly one of ``trace`` / ``indices`` / ``run`` is the measurement
-    source (checked at resolve time).  ``run`` is a zero-arg callable
-    returning a ``WaveTrace`` — the hook for instrumented-kernel sources
-    (see ``from_histogram`` / ``from_scatter_add``), kept lazy so building
-    a sweep's spec list costs nothing until ``Session.profile`` runs it.
+    Exactly one of ``trace`` / ``indices`` / ``run`` / ``kernel`` /
+    ``compiled``-or-``hlo_text`` is the measurement source (checked at
+    construction).  ``run`` is a zero-arg callable returning a
+    ``WaveTrace`` — the escape hatch for custom instrumented sources,
+    kept lazy so building a sweep's spec list costs nothing until a
+    provider collects it.  ``kernel`` is the declarative form the shipped
+    providers understand (see ``from_histogram`` / ``from_scatter_add``).
+    ``compiled``/``hlo_text`` describe a compiled step for the HLO
+    provider (no wave trace; roofline counters only).
     """
 
     label: str
     # measurement source (one of):
     trace: Optional[counters_mod.WaveTrace] = None
     indices: Optional[np.ndarray] = None
-    run: Optional[Any] = None          # () -> WaveTrace, lazy kernel source
+    run: Optional[Any] = None          # () -> WaveTrace, lazy custom source
+    kernel: Optional[KernelSource] = None
+    compiled: Optional[Any] = None     # jax compiled artifact (HLO provider)
+    hlo_text: Optional[str] = None     # post-optimization HLO module text
     # index-stream interpretation (for the ``indices`` source):
     num_bins: int = 256
     job_class: int = timing.FAO
@@ -44,6 +74,7 @@ class WorkloadSpec:
     waves_per_tile: Optional[int] = None   # None: keep the source's own
     pipeline_depth: Optional[int] = None
     num_cores: int = 8
+    num_devices: int = 1               # chips (HLO collective accounting)
     # roofline-side inputs:
     bytes_read: float = 0.0
     flops: float = 0.0
@@ -51,11 +82,14 @@ class WorkloadSpec:
 
     def __post_init__(self) -> None:
         sources = sum(s is not None
-                      for s in (self.trace, self.indices, self.run))
+                      for s in (self.trace, self.indices, self.run,
+                                self.kernel))
+        sources += self.compiled is not None or self.hlo_text is not None
         if sources != 1:
             raise ValueError(
                 f"WorkloadSpec {self.label!r} needs exactly one measurement "
-                f"source (trace | indices | run), got {sources}")
+                f"source (trace | indices | run | kernel | compiled/hlo), "
+                f"got {sources}")
 
     # -- derivation -------------------------------------------------------
 
@@ -66,13 +100,23 @@ class WorkloadSpec:
     def resolve_trace(self) -> counters_mod.WaveTrace:
         """Materialize the wave trace with this spec's geometry applied.
 
-        Never mutates the source trace: geometry overrides produce a
-        copied-geometry view via ``WaveTrace.with_geometry``.
+        Runs the kernel for ``kernel``/``run`` sources (the legacy
+        acquisition path; ``TraceProvider`` synthesizes ``kernel`` sources
+        without a launch instead).  Never mutates the source trace:
+        geometry overrides produce a copied-geometry view via
+        ``WaveTrace.with_geometry``.
         """
+        if self.compiled is not None or self.hlo_text is not None:
+            raise ValueError(
+                f"WorkloadSpec {self.label!r} has no wave-trace source "
+                f"(compiled/HLO specs carry roofline counters only — "
+                f"collect them with the 'hlo' provider)")
         if self.trace is not None:
             tr = self.trace
         elif self.run is not None:
             tr = self.run()
+        elif self.kernel is not None:
+            tr = self.run_kernel()
         else:
             tr = counters_mod.trace_from_indices(
                 np.asarray(self.indices), self.num_bins,
@@ -82,6 +126,31 @@ class WorkloadSpec:
         if self.waves_per_tile is not None or self.pipeline_depth is not None:
             tr = tr.with_geometry(self.waves_per_tile, self.pipeline_depth)
         return tr
+
+    def run_kernel(self) -> counters_mod.WaveTrace:
+        """Launch the described instrumented kernel; return its trace."""
+        if self.kernel is None:
+            raise ValueError(f"WorkloadSpec {self.label!r} has no kernel "
+                             f"source")
+        p = self.kernel.params
+        if self.kernel.op == "histogram":
+            from repro.kernels.histogram import ops as hist_ops  # lazy: jax
+            _, tr = hist_ops.histogram_instrumented(
+                p["img"], variant=p["variant"], force_fao=p["force_fao"],
+                weighted=p["weighted"], num_bins=p["num_bins"],
+                num_cores=self.num_cores,
+                waves_per_tile=self.waves_per_tile,
+                pipeline_depth=self.pipeline_depth or 2)
+            return tr
+        if self.kernel.op == "scatter_add":
+            from repro.kernels.scatter_add import ops as scat_ops  # lazy
+            _, c = scat_ops.instrumented_scatter_add(
+                p["ids"], p["values"], p["num_segments"],
+                num_cores=self.num_cores, job_class=p["job_class"],
+                waves_per_tile=self.waves_per_tile,
+                pipeline_depth=self.pipeline_depth or 2)
+            return c["trace"]
+        raise ValueError(f"unknown kernel op {self.kernel.op!r}")
 
     # -- constructors -----------------------------------------------------
 
@@ -104,47 +173,45 @@ class WorkloadSpec:
     def from_histogram(cls, img, *, label: str, variant: str = "hist",
                        force_fao: bool = True, weighted: bool = False,
                        num_bins: int = 256, **kw) -> "WorkloadSpec":
-        """Instrumented Pallas histogram launch as the trace source.
+        """Instrumented Pallas histogram launch as the counter source.
 
         ``bytes_read`` defaults to the image's HBM traffic (1 byte per
         channel, as in the paper's case study).
         """
-        from repro.kernels.histogram import ops as hist_ops  # lazy: pulls jax
-
         spec_kw = dict(kw)
-        num_cores = spec_kw.get("num_cores", 8)
-        # forward the launch geometry into the kernel wrapper so core
-        # round-robin assignment matches the direct-call and indices paths
-        wpt = spec_kw.get("waves_per_tile")
-        depth = spec_kw.get("pipeline_depth") or 2
-
-        def _run(img=img):
-            _, tr = hist_ops.histogram_instrumented(
-                img, variant=variant, force_fao=force_fao,
-                weighted=weighted, num_bins=num_bins, num_cores=num_cores,
-                waves_per_tile=wpt, pipeline_depth=depth)
-            return tr
-
-        spec_kw.setdefault("bytes_read", hist_ops.image_bytes(img))
-        return cls(label=label, run=_run, **spec_kw)
+        if "bytes_read" not in spec_kw:
+            from repro.kernels.histogram import ops as hist_ops  # lazy: jax
+            spec_kw["bytes_read"] = hist_ops.image_bytes(img)
+        return cls(label=label,
+                   kernel=KernelSource(op="histogram", params={
+                       "img": img, "variant": variant,
+                       "force_fao": force_fao, "weighted": weighted,
+                       "num_bins": num_bins}),
+                   **spec_kw)
 
     @classmethod
     def from_scatter_add(cls, ids, values, num_segments: int, *, label: str,
                          job_class: int = timing.FAO, **kw) -> "WorkloadSpec":
-        """Instrumented Pallas scatter-add launch as the trace source."""
-        from repro.kernels.scatter_add import ops as scat_ops  # lazy
-
+        """Instrumented Pallas scatter-add launch as the counter source."""
         spec_kw = dict(kw)
-        num_cores = spec_kw.get("num_cores", 8)
-        wpt = spec_kw.get("waves_per_tile")
-        depth = spec_kw.get("pipeline_depth") or 2
-
-        def _run(ids=ids, values=values):
-            _, c = scat_ops.instrumented_scatter_add(
-                ids, values, num_segments, num_cores=num_cores,
-                job_class=job_class, waves_per_tile=wpt,
-                pipeline_depth=depth)
-            return c["trace"]
-
         spec_kw.setdefault("bytes_read", float(np.asarray(ids).size * 4))
-        return cls(label=label, run=_run, **spec_kw)
+        return cls(label=label,
+                   kernel=KernelSource(op="scatter_add", params={
+                       "ids": ids, "values": values,
+                       "num_segments": num_segments,
+                       "job_class": job_class}),
+                   **spec_kw)
+
+    @classmethod
+    def from_compiled(cls, compiled=None, *, label: str,
+                      hlo_text: Optional[str] = None, num_devices: int = 1,
+                      **kw) -> "WorkloadSpec":
+        """Compiled-step source for the HLO provider (roofline counters).
+
+        Pass a jax compiled artifact (``jit(f).lower(...).compile()``),
+        a post-optimization HLO module text, or both (the artifact
+        supplies flops/bytes via cost analysis; the text supplies the
+        collective traffic).
+        """
+        return cls(label=label, compiled=compiled, hlo_text=hlo_text,
+                   num_devices=num_devices, **kw)

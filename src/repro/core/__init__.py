@@ -11,11 +11,16 @@ from repro.core.qmodel import (  # noqa: F401
 )
 from repro.core.timing import CAS, FAO, POPC, V5E, V5E_SCATTER  # noqa: F401
 from repro.core.microbench import build_table, make_pattern  # noqa: F401
-from repro.core.counters import WaveTrace, trace_from_indices  # noqa: F401
+from repro.core.counters import (  # noqa: F401
+    CounterSet,
+    WaveTrace,
+    trace_from_indices,
+)
 from repro.core.profiler import (  # noqa: F401
     CacheModel,
     WorkloadProfile,
     profile_compiled_step,
+    profile_counters,
     profile_scatter_workload,
 )
 from repro.core.bottleneck import classify, detect_shifts  # noqa: F401

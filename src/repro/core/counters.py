@@ -60,6 +60,40 @@ def wave_degree(indices: np.ndarray, lanes: int = LANES,
     return float(np.mean(mult.max(axis=1)))
 
 
+def geometry_occupancy(num_waves: int, waves_per_tile: int,
+                       pipeline_depth: int, n_max: int) -> float:
+    """Achieved concurrency fraction from launch geometry.
+
+    In-flight jobs = waves per tile x pipeline depth, capped by n_max and
+    by the total work available.
+    """
+    inflight = min(waves_per_tile * pipeline_depth, n_max, max(num_waves, 1))
+    return inflight / n_max
+
+
+def geometry_true_n(num_waves: int, waves_per_tile: int,
+                    pipeline_depth: int, n_max: int) -> float:
+    """Instrumented time-average queue length from launch geometry.
+
+    All waves of a tile are issued together; with double buffering the
+    queue holds up to waves_per_tile * depth jobs while the tail drains to
+    0.  The time-average over a long launch sits near the issued
+    concurrency, degraded by the drain fraction.
+    """
+    if num_waves == 0:
+        return 0.0
+    burst = min(waves_per_tile * pipeline_depth, n_max)
+    full_bursts = num_waves // max(burst, 1)
+    tail = num_waves - full_bursts * burst
+    # time-weighted average of a sawtooth: mean of (burst .. 1)
+    avg_full = (burst + 1) / 2.0
+    avg_tail = (tail + 1) / 2.0 if tail else 0.0
+    w_full = full_bursts * burst
+    w_tail = tail
+    denom = w_full + w_tail
+    return (avg_full * w_full + avg_tail * w_tail) / denom if denom else 0.0
+
+
 @dataclasses.dataclass
 class WaveTrace:
     """Per-wave instrumentation records for one kernel launch."""
@@ -98,35 +132,14 @@ class WaveTrace:
         )
 
     def occupancy(self, n_max: int) -> float:
-        """Achieved concurrency fraction from launch geometry.
-
-        In-flight jobs = waves per tile x pipeline depth, capped by n_max
-        and by the total work available.
-        """
-        inflight = min(self.waves_per_tile * self.pipeline_depth,
-                       n_max, max(self.num_waves, 1))
-        return inflight / n_max
+        """Achieved concurrency fraction (see ``geometry_occupancy``)."""
+        return geometry_occupancy(self.num_waves, self.waves_per_tile,
+                                  self.pipeline_depth, n_max)
 
     def true_n(self, n_max: int) -> float:
-        """Instrumented time-average queue length.
-
-        All waves of a tile are issued together; with double buffering the
-        queue holds up to waves_per_tile * depth jobs while the tail drains
-        to 0.  The time-average over a long launch sits near the issued
-        concurrency, degraded by the drain fraction.
-        """
-        if self.num_waves == 0:
-            return 0.0
-        burst = min(self.waves_per_tile * self.pipeline_depth, n_max)
-        full_bursts = self.num_waves // max(burst, 1)
-        tail = self.num_waves - full_bursts * burst
-        # time-weighted average of a sawtooth: mean of (burst .. 1)
-        avg_full = (burst + 1) / 2.0
-        avg_tail = (tail + 1) / 2.0 if tail else 0.0
-        w_full = full_bursts * burst
-        w_tail = tail
-        denom = w_full + w_tail
-        return (avg_full * w_full + avg_tail * w_tail) / denom if denom else 0.0
+        """Instrumented time-avg queue length (see ``geometry_true_n``)."""
+        return geometry_true_n(self.num_waves, self.waves_per_tile,
+                               self.pipeline_depth, n_max)
 
 
 def concat_traces(traces: Sequence[WaveTrace]) -> WaveTrace:
@@ -178,6 +191,129 @@ def trace_from_indices(
         waves_per_tile=waves_per_tile,
         pipeline_depth=pipeline_depth,
     )
+
+
+# ---------------------------------------------------------------------------
+# CounterSet: the uniform counter bundle every acquisition backend returns
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CounterSet:
+    """Uniform paper-Table-1 counter bundle, independent of its source.
+
+    Every ``repro.analysis.providers`` backend — synthetic trace,
+    instrumented Pallas kernel, HLO cost analysis, microbenchmark timing —
+    returns one of these, and ``core.profiler.profile_counters`` consumes
+    it.  The scatter-unit counters are per-core arrays (length
+    ``num_cores``); a source with no scatter visibility (HLO) leaves them
+    zero and only fills the roofline side (``bytes_read``/``flops``/
+    ``ici_bytes``).  ``wall_time_s`` is filled when the source actually
+    timed something (microbench path); ``None`` means modeled-only.
+    """
+
+    label: str
+    source: str = "trace"
+    num_cores: int = 1
+    # scatter-unit counters, one entry per core ((num_cores,) arrays):
+    O: np.ndarray = None            # serialization transactions per core
+    N_f: np.ndarray = None          # FAO-class wave jobs per core
+    N_c: np.ndarray = None          # CAS-class wave jobs per core
+    N_p: np.ndarray = None          # POPC-class wave jobs per core
+    lanes_active: float = float(LANES)  # mean active lanes per wave
+    # launch geometry (defines the occupancy estimate n_hat):
+    num_waves: int = 0
+    waves_per_tile: int = 1
+    pipeline_depth: int = 2
+    # roofline-side counters:
+    bytes_read: float = 0.0
+    flops: float = 0.0
+    ici_bytes: float = 0.0          # per-link collective wire traffic
+    overhead_cycles: float = 500.0
+    wall_time_s: Optional[float] = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        for name in ("O", "N_f", "N_c", "N_p"):
+            v = getattr(self, name)
+            if v is None:
+                v = np.zeros(self.num_cores)
+            setattr(self, name, np.asarray(v, np.float64))
+
+    # -- derived (paper Table 2 inputs) -----------------------------------
+
+    @property
+    def N(self) -> np.ndarray:
+        """Total wave jobs per core."""
+        return self.N_f + self.N_c + self.N_p
+
+    @property
+    def total_jobs(self) -> float:
+        return float(np.sum(self.N))
+
+    @property
+    def total_O(self) -> float:
+        return float(np.sum(self.O))
+
+    @property
+    def e(self) -> float:
+        """Global average serialization degree e = O / N (paper Table 2)."""
+        n = self.total_jobs
+        return self.total_O / n if n else 1.0
+
+    def occupancy(self, n_max: int) -> float:
+        return geometry_occupancy(self.num_waves, self.waves_per_tile,
+                                  self.pipeline_depth, n_max)
+
+    def true_n(self, n_max: int) -> float:
+        return geometry_true_n(self.num_waves, self.waves_per_tile,
+                               self.pipeline_depth, n_max)
+
+    # -- construction / conversion ----------------------------------------
+
+    @classmethod
+    def from_trace(cls, trace: "WaveTrace", *, label: str = "",
+                   num_cores: int = 1, bytes_read: float = 0.0,
+                   flops: float = 0.0, overhead_cycles: float = 500.0,
+                   source: str = "trace", wall_time_s: Optional[float] = None,
+                   meta: Optional[dict] = None) -> "CounterSet":
+        """Aggregate a wave trace into the per-core counter bundle."""
+        O = np.zeros(num_cores)
+        n_f = np.zeros(num_cores)
+        n_c = np.zeros(num_cores)
+        n_p = np.zeros(num_cores)
+        for core in range(num_cores):
+            sel = trace.core == core
+            O[core] = float(np.sum(trace.degree[sel]))
+            cls_sel = trace.job_class[sel]
+            n_f[core] = float(np.sum(cls_sel == timing.FAO))
+            n_c[core] = float(np.sum(cls_sel == timing.CAS))
+            n_p[core] = float(np.sum(cls_sel == timing.POPC))
+        lanes = (float(np.mean(trace.lanes_active))
+                 if trace.num_waves else float(LANES))
+        return cls(
+            label=label, source=source, num_cores=num_cores,
+            O=O, N_f=n_f, N_c=n_c, N_p=n_p, lanes_active=lanes,
+            num_waves=trace.num_waves, waves_per_tile=trace.waves_per_tile,
+            pipeline_depth=trace.pipeline_depth,
+            bytes_read=bytes_read, flops=flops,
+            overhead_cycles=overhead_cycles, wall_time_s=wall_time_s,
+            meta=dict(meta or {}),
+        )
+
+    def to_basic_counters(self, T_cycles_per_core: np.ndarray,
+                          n_max: int) -> list[BasicCounters]:
+        """Per-core ``BasicCounters`` against a given measurement window."""
+        occ = self.occupancy(n_max)
+        n_true = self.true_n(n_max)
+        return [
+            BasicCounters(
+                O=float(self.O[core]), N_f=float(self.N_f[core]),
+                N_c=float(self.N_c[core]), N_p=float(self.N_p[core]),
+                T_cycles=float(T_cycles_per_core[core]),
+                occupancy=occ, n_true=n_true, core_id=core)
+            for core in range(self.num_cores)
+        ]
 
 
 def collect_basic_counters(

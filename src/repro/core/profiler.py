@@ -68,6 +68,19 @@ class WorkloadProfile:
         return float(np.mean([c.U for c in self.per_core])) if self.per_core else 0.0
 
     @property
+    def e(self) -> float:
+        """Job-weighted serialization degree across cores (= global O/N)."""
+        jobs = float(sum(c.N for c in self.per_core))
+        return (float(sum(c.e * c.N for c in self.per_core)) / jobs
+                if jobs else 0.0)
+
+    @property
+    def n_hat(self) -> float:
+        """Peak per-core concurrency estimate across cores."""
+        return (float(max(c.n_hat for c in self.per_core))
+                if self.per_core else 0.0)
+
+    @property
     def bottleneck(self) -> str:
         best, best_u = "none", 0.0
         for u in self.units:
@@ -92,6 +105,97 @@ class WorkloadProfile:
         return buf.getvalue()
 
 
+def profile_counters(
+    cset: counters_mod.CounterSet,
+    table: qmodel.ServiceTimeTable,
+    *,
+    params: Optional[timing.ScatterUnitParams] = None,
+    chip: Optional[timing.ChipParams] = None,
+    cache: Optional[CacheModel] = None,
+    use_true_n: bool = False,
+) -> WorkloadProfile:
+    """Profile one launch from a uniform ``CounterSet`` (any provider).
+
+    This is the single entry every counter source funnels into: the
+    legacy trace path (``profile_scatter_workload``) and all
+    ``repro.analysis.providers`` backends build a ``CounterSet`` and
+    delegate here.  Two-phase, like the paper: (1) the queue model's busy
+    time B from the counters (B needs no T); (2) model the measurement
+    window T per core from all units and overheads; (3) derive U = B / T.
+
+    ``params``/``chip``/``cache`` default to the v5e model; pass a
+    ``repro.analysis.Device``'s bundle (or use ``Session.profile``) to
+    target other hardware.
+    """
+    if params is None:
+        params = timing.V5E_SCATTER
+    if chip is None:
+        chip = timing.V5E
+    if cache is None:
+        cache = CacheModel()
+    num_cores = cset.num_cores
+    # Phase 1: scatter busy time per core (empty-counter sources skip it).
+    if cset.total_jobs > 0:
+        basic = cset.to_basic_counters(np.ones(num_cores), params.n_max)
+        prelim = qmodel.derive_core_utilization(
+            basic, table, n_max=params.n_max, use_true_n=use_true_n)
+        scatter_busy = np.array([c.B_cycles for c in prelim])
+        n_hat = prelim[0].n_hat if prelim else 1.0
+    else:
+        scatter_busy = np.zeros(num_cores)
+        n_hat = 1.0
+
+    # Phase 2: companion units and the kernel-time model.
+    bytes_per_cycle = chip.hbm_bw / chip.clock_hz
+    mem_ideal = (cset.bytes_read / num_cores) / bytes_per_cycle
+    # Latency exposure: when the working set spills the LLC, each tile's
+    # leading access exposes miss latency unless concurrency hides it.
+    # Scatter-visible sources only: the heuristic reads the launch
+    # geometry, which an HLO-only CounterSet doesn't have.
+    if cset.total_jobs > 0 and cset.bytes_read > cache.llc_bytes:
+        hide = min(1.0, n_hat / cache.hide_concurrency)
+        tiles = max(1.0, cset.num_waves / max(cset.waves_per_tile, 1))
+        exposure = (tiles / num_cores) * cache.miss_latency_cycles * (1.0 - hide)
+    else:
+        exposure = 0.0
+    mem_eff = mem_ideal + exposure
+    compute_cycles = (cset.flops / num_cores) / (chip.peak_bf16_flops
+                                                 / chip.clock_hz)
+    ici_cycles = cset.ici_bytes / (chip.ici_bw_per_link / chip.clock_hz)
+
+    T = cset.overhead_cycles + np.maximum(
+        scatter_busy,
+        np.maximum(mem_eff, np.maximum(compute_cycles, ici_cycles)))
+
+    # Phase 3: utilization against the modeled window.
+    if cset.total_jobs > 0:
+        basic = cset.to_basic_counters(T, params.n_max)
+        per_core = qmodel.derive_core_utilization(
+            basic, table, n_max=params.n_max, use_true_n=use_true_n)
+    else:
+        per_core = []
+
+    window = float(np.max(T))
+    # One fixed unit set for every source: sweeps stack unit names across
+    # points, so membership must not depend on a point's values (an
+    # ici-less point in a collective sweep would otherwise crash the
+    # stacking), and a server missing from the report could never be
+    # named as the bottleneck it is.
+    units = [
+        UnitUtilization("scatter", float(np.mean(scatter_busy)), window),
+        UnitUtilization("hbm", float(mem_eff), window),
+        UnitUtilization("mxu", float(compute_cycles), window),
+        UnitUtilization("ici", float(ici_cycles), window),
+    ]
+    return WorkloadProfile(
+        label=cset.label, per_core=per_core, units=units, T_cycles=T,
+        params={"bytes_read": cset.bytes_read, "flops": cset.flops,
+                "overhead_cycles": cset.overhead_cycles,
+                "use_true_n": use_true_n, "source": cset.source,
+                "wall_time_s": cset.wall_time_s},
+    )
+
+
 def profile_scatter_workload(
     trace: counters_mod.WaveTrace,
     table: qmodel.ServiceTimeTable,
@@ -106,66 +210,17 @@ def profile_scatter_workload(
     cache: Optional[CacheModel] = None,
     use_true_n: bool = False,
 ) -> WorkloadProfile:
-    """Profile one scatter-heavy launch (histogram, MoE dispatch, ...).
+    """Profile one scatter-heavy launch from its wave trace (legacy entry).
 
-    Two-phase, like the paper: (1) collect Table-1 counters and the queue
-    model's busy time B (B needs no T); (2) model the measurement window T
-    per core from all units and overheads; (3) derive U = B / T.
-
-    ``params``/``chip``/``cache`` default to the v5e model; pass a
-    ``repro.analysis.Device``'s bundle (or use ``Session.profile``) to
-    target other hardware.
+    Aggregates the trace into a ``CounterSet`` and delegates to
+    ``profile_counters`` — kept for the pre-provider call sites; new code
+    should go through ``repro.analysis.Session`` / a provider.
     """
-    if params is None:
-        params = timing.V5E_SCATTER
-    if chip is None:
-        chip = timing.V5E
-    if cache is None:
-        cache = CacheModel()
-    # Phase 1: counters + scatter busy time, per core.
-    basic = counters_mod.collect_basic_counters(
-        trace, num_cores=num_cores, T_cycles_per_core=np.ones(num_cores),
-        params=params)
-    prelim = qmodel.derive_core_utilization(
-        basic, table, n_max=params.n_max, use_true_n=use_true_n)
-    scatter_busy = np.array([c.B_cycles for c in prelim])
-
-    # Phase 2: companion units and the kernel-time model.
-    bytes_per_cycle = chip.hbm_bw / chip.clock_hz
-    mem_ideal = (bytes_read / num_cores) / bytes_per_cycle
-    # Latency exposure: when the working set spills the LLC, each tile's
-    # leading access exposes miss latency unless concurrency hides it.
-    n_hat = prelim[0].n_hat if prelim else 1.0
-    if bytes_read > cache.llc_bytes:
-        hide = min(1.0, n_hat / cache.hide_concurrency)
-        tiles = max(1.0, trace.num_waves / max(trace.waves_per_tile, 1))
-        exposure = (tiles / num_cores) * cache.miss_latency_cycles * (1.0 - hide)
-    else:
-        exposure = 0.0
-    mem_eff = mem_ideal + exposure
-    compute_cycles = (flops / num_cores) / (chip.peak_bf16_flops / chip.clock_hz)
-
-    T = overhead_cycles + np.maximum(
-        scatter_busy, np.maximum(mem_eff, compute_cycles))
-
-    # Phase 3: utilization against the modeled window.
-    basic = counters_mod.collect_basic_counters(
-        trace, num_cores=num_cores, T_cycles_per_core=T, params=params)
-    per_core = qmodel.derive_core_utilization(
-        basic, table, n_max=params.n_max, use_true_n=use_true_n)
-
-    window = float(np.max(T))
-    units = [
-        UnitUtilization("scatter", float(np.mean(scatter_busy)), window),
-        UnitUtilization("hbm", float(mem_eff), window),
-        UnitUtilization("mxu", float(compute_cycles), window),
-    ]
-    return WorkloadProfile(
-        label=label, per_core=per_core, units=units, T_cycles=T,
-        params={"bytes_read": bytes_read, "flops": flops,
-                "overhead_cycles": overhead_cycles,
-                "use_true_n": use_true_n},
-    )
+    cset = counters_mod.CounterSet.from_trace(
+        trace, label=label, num_cores=num_cores, bytes_read=bytes_read,
+        flops=flops, overhead_cycles=overhead_cycles)
+    return profile_counters(cset, table, params=params, chip=chip,
+                            cache=cache, use_true_n=use_true_n)
 
 
 def profile_compiled_step(

@@ -99,14 +99,9 @@ def histogram_instrumented(
     deg = np.asarray(degrees).reshape(-1)
     num_waves = deg.shape[0]
     if waves_per_tile is None:
-        waves_per_tile = (tile * img.shape[1]) // instr.LANES
+        waves_per_tile = default_waves_per_tile(img, tile)
     tiles = np.arange(num_waves) // max(waves_per_tile, 1)
-    if weighted:
-        job_class = timing.CAS
-    elif force_fao:
-        job_class = timing.FAO
-    else:
-        job_class = timing.POPC
+    job_class = histogram_job_class(force_fao=force_fao, weighted=weighted)
     trace = counters_mod.WaveTrace(
         degree=deg,
         job_class=np.full(num_waves, job_class, np.int32),
@@ -121,3 +116,84 @@ def histogram_instrumented(
 def image_bytes(img: jnp.ndarray) -> float:
     """HBM read traffic of the launch: 1 byte/channel as in the paper."""
     return float(img.shape[0] * img.shape[1])
+
+
+def histogram_job_class(*, force_fao: bool, weighted: bool) -> int:
+    """Instruction-class mapping (module docstring): CAS > FAO > POPC."""
+    if weighted:
+        return timing.CAS
+    if force_fao:
+        return timing.FAO
+    return timing.POPC
+
+
+def default_waves_per_tile(img, tile: int = hk.DEFAULT_TILE) -> int:
+    """The kernel's own tiling: waves issued per grid tile."""
+    return (tile * np.shape(img)[1]) // instr.LANES
+
+
+def committed_index_stream(img, *, num_bins: int = 256,
+                           variant: str = "hist",
+                           tile: int = hk.DEFAULT_TILE) -> np.ndarray:
+    """The flat bin-index stream the kernel commits, synthesized in numpy.
+
+    Mirrors ``kernel._issue_ordered_bins`` (zero-padding to a tile
+    multiple, channel-offset bins, per-lane channel rotation for hist2,
+    step-major ordering within each commit group) without running Pallas —
+    the modeled counter source the instrumented kernel cross-validates.
+    The per-commit-group transform never mixes rows across tiles, so it is
+    applied to the whole padded image at once.
+    """
+    reorder = {"hist": False, "hist2": True}[variant]
+    a = np.asarray(img).astype(np.int32)
+    pad = (-a.shape[0]) % tile
+    if pad:
+        a = np.concatenate([a, np.zeros((pad, a.shape[1]), a.dtype)])
+    t, c = a.shape
+    g = instr.COMMIT_GROUP
+    step = np.broadcast_to(np.arange(c, dtype=np.int32)[None, :], (t, c))
+    if reorder:
+        lane = ((np.arange(t, dtype=np.int32) % tile)[:, None]
+                + np.zeros((1, c), np.int32))
+        ch = (step + lane) % c
+        vals = np.take_along_axis(a, ch, axis=1)
+    else:
+        ch = step
+        vals = a
+    bins = ch * num_bins + vals                           # (t, c) pixel-major
+    bins = bins.reshape(t // g, g, c).transpose(0, 2, 1)  # step-major
+    return bins.reshape(t * c)
+
+
+def collect_counters(
+    img,
+    *,
+    label: str = "",
+    num_bins: int = 256,
+    variant: str = "hist",
+    tile: int = hk.DEFAULT_TILE,
+    force_fao: bool = False,
+    weighted: bool = False,
+    num_cores: int = 8,
+    waves_per_tile: Optional[int] = None,
+    pipeline_depth: int = 2,
+    bytes_read: Optional[float] = None,
+    flops: float = 0.0,
+    overhead_cycles: float = 500.0,
+) -> counters_mod.CounterSet:
+    """Run the instrumented kernel and return its counters as a CounterSet.
+
+    The provider hook: ``repro.analysis.providers.InstrumentedKernelProvider``
+    calls this so every counter (``O``, ``N``, active lanes) is read back
+    from the interpret-mode Pallas launch, not synthesized.
+    """
+    img = jnp.asarray(img)
+    _, trace = histogram_instrumented(
+        img, num_bins=num_bins, variant=variant, tile=tile,
+        force_fao=force_fao, weighted=weighted, num_cores=num_cores,
+        waves_per_tile=waves_per_tile, pipeline_depth=pipeline_depth)
+    return counters_mod.CounterSet.from_trace(
+        trace, label=label, num_cores=num_cores,
+        bytes_read=image_bytes(img) if bytes_read is None else bytes_read,
+        flops=flops, overhead_cycles=overhead_cycles,
+        source="kernel", meta={"op": "histogram", "variant": variant})

@@ -55,6 +55,64 @@ def bincount(ids: jnp.ndarray, *, num_segments: int,
     return out
 
 
+def committed_id_stream(ids, num_segments: int, *,
+                        tile: int = sk.DEFAULT_TILE) -> np.ndarray:
+    """The flat id stream the instrumented kernel commits (numpy).
+
+    Pads to a tile multiple with *unique out-of-range* sentinel ids: they
+    match no segment block (contributing nothing) and add no artificial
+    conflicts to the degree counters.  ``instrumented_scatter_add`` feeds
+    this exact stream to the kernel, so trace-side synthesis and in-kernel
+    instrumentation see identical commit groups.
+    """
+    ids = np.asarray(ids).astype(np.int32).reshape(-1)
+    pad = (-ids.shape[0]) % tile
+    if pad:
+        seg_blocks = -(-num_segments // min(sk.DEFAULT_SEG_BLOCK, num_segments))
+        base = seg_blocks * min(sk.DEFAULT_SEG_BLOCK, num_segments)
+        sentinel = base + np.arange(pad, dtype=np.int32)
+        ids = np.concatenate([ids, sentinel]).astype(np.int32)
+    return ids
+
+
+def default_waves_per_tile(tile: int = sk.DEFAULT_TILE) -> int:
+    """The kernel's own tiling: waves issued per grid tile."""
+    return tile // instr.LANES
+
+
+def collect_counters(
+    ids,
+    values,
+    num_segments: int,
+    *,
+    label: str = "",
+    tile: int = sk.DEFAULT_TILE,
+    num_cores: int = 8,
+    job_class: int = timing.FAO,
+    waves_per_tile: int | None = None,
+    pipeline_depth: int = 2,
+    bytes_read: float | None = None,
+    flops: float = 0.0,
+    overhead_cycles: float = 500.0,
+) -> counters_mod.CounterSet:
+    """Run the instrumented kernel and return its counters as a CounterSet.
+
+    The provider hook: ``repro.analysis.providers.InstrumentedKernelProvider``
+    calls this so every counter is read back from the interpret-mode
+    Pallas launch, not synthesized.
+    """
+    _, counters = instrumented_scatter_add(
+        ids, values, num_segments, tile=tile, num_cores=num_cores,
+        job_class=job_class, waves_per_tile=waves_per_tile,
+        pipeline_depth=pipeline_depth)
+    if bytes_read is None:
+        bytes_read = float(np.asarray(ids).size * 4)
+    return counters_mod.CounterSet.from_trace(
+        counters["trace"], label=label, num_cores=num_cores,
+        bytes_read=bytes_read, flops=flops, overhead_cycles=overhead_cycles,
+        source="kernel", meta={"op": "scatter_add"})
+
+
 def instrumented_scatter_add(
     ids,
     values,
@@ -79,20 +137,14 @@ def instrumented_scatter_add(
     post-construction mutation needed.
     """
     del wave  # fixed at instr.LANES inside the kernel
-    ids = jnp.asarray(ids).astype(jnp.int32).reshape(-1)
+    n = np.asarray(ids).reshape(-1).shape[0]
+    ids = jnp.asarray(
+        committed_id_stream(ids, num_segments, tile=tile))
     values = jnp.asarray(values, jnp.float32)
     if values.ndim == 1:
         values = values[:, None]
-    # Pad with *unique out-of-range* sentinel ids: they match no segment
-    # block (contributing nothing) and add no artificial conflicts to the
-    # instrumented degree counters.
-    n = ids.shape[0]
-    pad = (-n) % tile
+    pad = ids.shape[0] - n
     if pad:
-        seg_blocks = -(-num_segments // min(sk.DEFAULT_SEG_BLOCK, num_segments))
-        base = seg_blocks * min(sk.DEFAULT_SEG_BLOCK, num_segments)
-        sentinel = base + jnp.arange(pad, dtype=jnp.int32)
-        ids = jnp.concatenate([ids, sentinel])
         values = jnp.concatenate(
             [values, jnp.zeros((pad,) + values.shape[1:], values.dtype)])
     out, deg = sk.scatter_add_pallas(values, ids, num_segments, tile=tile,

@@ -186,6 +186,97 @@ def test_report_formats(sess):
         sess.report("yaml")
 
 
+def test_speedup_records_both_profiles(sess):
+    """report() after speedup() must show the pair, not a stale result."""
+    before = WorkloadSpec.from_indices(_solid(), 256, label="before",
+                                       waves_per_tile=32)
+    after = WorkloadSpec.from_indices(_uniform(), 256, label="after",
+                                      waves_per_tile=32)
+    sess.profile(WorkloadSpec.from_indices(_solid(4), 256, label="stale"))
+    sp = sess.speedup(before, after)
+    assert sp > 1.0
+    assert len(sess.last) == 2
+    text = sess.report()
+    assert "before" in text and "after" in text and "stale" not in text
+    assert float(sess.last.speedup_vs_first[1]) == sp
+
+
+def test_single_point_report_has_no_sweep_lines(sess):
+    sess.profile(WorkloadSpec.from_indices(_solid(), 256, label="one",
+                                           waves_per_tile=32))
+    text = sess.report()
+    assert "one" in text
+    assert "no bottleneck shifts" not in text
+    assert "profile" in text and "sweep" not in text
+
+
+def test_to_rows_aggregates_all_cores():
+    """e/n_hat must reflect every core, not per_core[0] (satellite fix)."""
+    import repro.core.profiler as prof_mod
+    from repro.core import qmodel
+
+    def core(i, e, n_hat, n_jobs=4):
+        return qmodel.CoreUtilization(core_id=i, N=n_jobs, n_hat=n_hat, e=e,
+                                      c=0.0, S_cycles=1.0, B_cycles=4.0,
+                                      T_cycles=10.0, U=0.4)
+
+    p = prof_mod.WorkloadProfile(
+        label="multi",
+        per_core=[core(0, 2.0, 8.0, n_jobs=12), core(1, 4.0, 16.0, n_jobs=4)],
+        units=[prof_mod.UnitUtilization("scatter", 4.0, 10.0)],
+        T_cycles=np.array([10.0, 10.0]))
+    from repro.analysis.session import SweepResult
+    from repro.core import bottleneck as bn
+    result = SweepResult(
+        device=get_device("v5e"), specs=[], profiles=[p],
+        verdicts=[bn.classify(p)], shifts=[],
+        utilization={"scatter": np.array([0.4])},
+        speedup_vs_first=np.array([1.0]))
+    row = result.to_rows()[0]
+    # job-weighted mean (12*2 + 4*4)/16, matching e = O/N — neither
+    # per_core[0] nor the unweighted core mean
+    assert row["e"] == 2.5
+    assert row["n_hat"] == 16.0  # max(8, 16), not per_core[0]
+
+
+def test_render_csv_roundtrips_to_rows(sess):
+    import csv as csv_mod
+    import io
+
+    sess.sweep([
+        WorkloadSpec.from_indices(_solid(), 256, label="solid",
+                                  waves_per_tile=32),
+        WorkloadSpec.from_indices(_uniform(), 256, label="uniform",
+                                  waves_per_tile=32)])
+    rows = sess.last.to_rows()
+    parsed = list(csv_mod.DictReader(io.StringIO(sess.report("csv"))))
+    assert len(parsed) == len(rows)
+    for got, want in zip(parsed, rows):
+        assert set(got) == set(want)
+        assert got["label"] == want["label"]
+        assert got["bottleneck"] == want["bottleneck"]
+        assert float(got["e"]) == pytest.approx(want["e"])
+        assert float(got["n_hat"]) == pytest.approx(want["n_hat"])
+        assert float(got["U_scatter"]) == pytest.approx(want["U_scatter"])
+
+
+def test_render_json_schema_is_stable(sess):
+    sess.sweep([WorkloadSpec.from_indices(_solid(), 256, label="s",
+                                          waves_per_tile=32)])
+    payload = json.loads(sess.report("json"))
+    assert set(payload) == {"device", "points", "shifts"}
+    assert set(payload["points"][0]) == {
+        "label", "bottleneck", "saturated", "comment", "scatter_model_U",
+        "speedup_vs_first", "e", "n_hat", "U_scatter", "U_hbm", "U_mxu",
+        "U_ici"}
+
+
+def test_render_unknown_fmt_raises(sess):
+    sess.profile(WorkloadSpec.from_indices(_solid(4), 256, label="x"))
+    with pytest.raises(ValueError, match="unknown report format"):
+        sess.last.render("yaml")
+
+
 # -- deprecation shims --------------------------------------------------------
 
 
