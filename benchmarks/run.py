@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows (spec format):
                                 (paper §5) + acquisition-cost asymmetry
   * moe_dispatch_profile      — router balance -> scatter-unit utilization
                                 (framework integration of the model)
+  * sweep_grid_parallel       — grid-sweep engine: serial vs concurrent
+                                vs memoized collection (CLI fast path)
   * kernel_walltime           — interpret-mode Pallas kernel wall times
                                 (regression canary; not TPU numbers)
   * roofline_table            — per (arch x shape x mesh) terms from the
@@ -165,6 +167,34 @@ def sec5_model_vs_measured() -> None:
          f"speedup={us_kernel / max(us_trace, 1e-9):.1f}x")
 
 
+def sweep_grid_parallel() -> None:
+    """Grid-sweep engine: serial vs concurrent collection vs memoized
+    re-run on a 16-point occupancy grid (the CLI 'sweep' fast path)."""
+    from repro.analysis import Session
+
+    rng = np.random.default_rng(0)
+    base = WorkloadSpec.from_indices(
+        rng.integers(0, 256, 1 << 17), 256, label="uniform-128K")
+    specs = base.grid(waves_per_tile=[2, 4, 8, 16, 32, 64, 128, 256],
+                      pipeline_depth=[2, 4])
+    serial_sess = Session(device="v5e")
+    t0 = time.perf_counter()
+    serial_sess.sweep(specs, parallel=1)
+    us_serial = (time.perf_counter() - t0) * 1e6
+    par_sess = Session(device="v5e")
+    t0 = time.perf_counter()
+    par_sess.sweep(specs, parallel=8)
+    us_parallel = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    par_sess.sweep(specs, parallel=8)   # every point memoized now
+    us_memo = (time.perf_counter() - t0) * 1e6
+    emit("sweep_grid_16pt", us_parallel,
+         f"serial_us={us_serial:.0f};parallel_us={us_parallel:.0f};"
+         f"memo_us={us_memo:.0f};"
+         f"parallel_speedup={us_serial / max(us_parallel, 1e-9):.2f}x;"
+         f"memo_speedup={us_serial / max(us_memo, 1e-9):.1f}x")
+
+
 def kernel_walltime() -> None:
     img = jnp.asarray(make_image("uniform", 1 << 16))
     us = _timeit(lambda: hist_ops.histogram(img).block_until_ready())
@@ -206,7 +236,7 @@ def roofline_table() -> None:
 
 ALL = [fig1_service_time_table, fig3_utilization_sweep, fig4_popc_vs_fao,
        fig5_reorder_speedup, sec5_model_vs_measured, moe_dispatch_profile,
-       kernel_walltime, roofline_table]
+       sweep_grid_parallel, kernel_walltime, roofline_table]
 
 
 def main() -> None:

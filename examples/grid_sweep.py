@@ -1,0 +1,53 @@
+"""Grid-sweep engine demo: one base workload x a cartesian parameter grid
+x two devices, collected concurrently with per-point memoization.
+
+The same sweep is available without Python:
+
+    PYTHONPATH=src python -m repro sweep --workload indices \
+        --size 2^16 2^18 --dist uniform \
+        --waves-per-tile 4 8 16 32 --pipeline-depth 2 4 \
+        --devices v5e v5p --jobs 8 --format csv
+
+Run: PYTHONPATH=src python examples/grid_sweep.py
+"""
+
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.analysis import WorkloadSpec, sweep_grid
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "grid_sweep.csv")
+
+
+def main():
+    rng = np.random.default_rng(0)
+    base = WorkloadSpec.from_indices(
+        rng.integers(0, 256, 1 << 18), 256, label="uniform-256K")
+    results = sweep_grid(
+        base,
+        {"waves_per_tile": [4, 8, 16, 32], "pipeline_depth": [2, 4]},
+        devices=("v5e", "v5p"),
+        parallel=8)
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        for name, result in results.items():
+            print(result.render("text"))
+            f.write(result.render("csv"))
+    print(f"wrote per-device sweep csv to {OUT}")
+
+    # the engine's point: same verdict machinery, now over a whole grid —
+    # occupancy (waves_per_tile x pipeline_depth) moves utilization, and
+    # the device axis shows hardware balance moving the bottleneck
+    for name, result in results.items():
+        peak = max(result.profiles, key=lambda p: p.scatter_utilization)
+        print(f"{name}: peak scatter U={peak.scatter_utilization:.2%} "
+              f"at {peak.label}")
+
+
+if __name__ == "__main__":
+    main()

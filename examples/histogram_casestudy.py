@@ -8,6 +8,11 @@ size) and re-geometried per occupancy point via frozen ``WorkloadSpec``s —
 no post-construction trace mutation.
 
 Run: PYTHONPATH=src python examples/histogram_casestudy.py [--fast]
+
+The headline hist-vs-hist2 comparison (same LLC emulation, same Session
+numbers) is also available without Python:
+
+    PYTHONPATH=src python -m repro compare --device v5e
 """
 
 import argparse

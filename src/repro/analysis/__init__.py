@@ -42,4 +42,5 @@ from repro.analysis.session import (  # noqa: F401
     Session,
     SweepResult,
     ValidationReport,
+    sweep_grid,
 )

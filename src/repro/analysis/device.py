@@ -107,6 +107,17 @@ class Device:
         _TABLE_MEMO[key] = tab
         return tab
 
+    def describe(self, cache_dir: Optional[Union[str, Path]] = None) -> dict:
+        """Flat summary record (the ``devices`` CLI listing / json row)."""
+        return {
+            "name": self.name,
+            "description": self.description,
+            "cores": self.num_cores,
+            "clock_ghz": self.chip.clock_hz / 1e9,
+            "hbm_gbps": self.chip.hbm_bw / 1e9,
+            "table_cached": self.table_path(cache_dir).exists(),
+        }
+
     # -- variants ---------------------------------------------------------
 
     def with_(self, **changes) -> "Device":

@@ -26,6 +26,8 @@ import csv
 import dataclasses
 import io
 import json
+import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -95,8 +97,18 @@ class SweepResult:
             rows = self.to_rows()
             if not rows:
                 return ""
+            # Heterogeneous sweeps produce ragged rows (a point's U_*
+            # columns depend on its unit set): the header must be the
+            # union across ALL rows, in first-appearance order, with
+            # missing cells written empty — fieldnames from rows[0] alone
+            # raises ValueError on the first later-only column.
+            fieldnames: list[str] = []
+            for row in rows:
+                for k in row:
+                    if k not in fieldnames:
+                        fieldnames.append(k)
             buf = io.StringIO()
-            w = csv.DictWriter(buf, fieldnames=list(rows[0]))
+            w = csv.DictWriter(buf, fieldnames=fieldnames, restval="")
             w.writeheader()
             w.writerows(rows)
             return buf.getvalue()
@@ -213,13 +225,18 @@ class Session:
     def __init__(self, device: Union[str, Device] = "v5e", *,
                  table: Optional[qmodel.ServiceTimeTable] = None,
                  cache_dir=None, use_true_n: bool = False,
-                 provider: Union[str, CounterProvider] = "trace") -> None:
+                 provider: Union[str, CounterProvider] = "trace",
+                 shift_tol: float = bottleneck.SHIFT_TOL) -> None:
         self.device = get_device(device)
         self.provider = get_provider(provider)
         self.table = table if table is not None \
             else self.device.table(cache_dir)
         self.use_true_n = use_true_n
+        self.shift_tol = shift_tol
         self._last: Optional[SweepResult] = None
+        # per-point memo for sweeps: (provider, fingerprint) -> CounterSet
+        self._collect_memo: dict[tuple[str, str], CounterSet] = {}
+        self._memo_lock = threading.Lock()
 
     # -- the pipeline -----------------------------------------------------
 
@@ -241,12 +258,31 @@ class Session:
         self.profile(spec)
         return self._last.verdicts[0]
 
-    def sweep(self, specs: Sequence[WorkloadSpec]) -> SweepResult:
-        """Profile every spec and analyze the sweep as a whole."""
+    def sweep(self, specs: Sequence[WorkloadSpec], *,
+              parallel: Optional[int] = None) -> SweepResult:
+        """Profile every spec and analyze the sweep as a whole.
+
+        ``parallel`` collects points on a thread pool of that many workers
+        (counter acquisition — trace synthesis, interpret-mode kernel runs
+        — dominates sweep cost and is numpy/jax-bound, so threads overlap
+        it well); ``None``/``1`` keeps the serial path.  Either way points
+        are memoized by content fingerprint: a spec already collected by
+        this session (same provider) is served from cache and only
+        relabeled, so repeated grid points and re-runs are free.  Result
+        order always matches ``specs`` — parallelism never reorders.
+        """
         specs = list(specs)
         if not specs:
             raise ValueError("sweep() needs at least one WorkloadSpec")
-        profiles = [self._profile_only(s) for s in specs]
+        workers = min(parallel or 1, len(specs))
+        if workers <= 1:
+            profiles = [self._profile_only(s) for s in specs]
+        else:
+            # whole points (collect + profile) go to the pool: both phases
+            # are per-point independent, and the shared state they touch
+            # (memo dict, read-only table) is lock-protected/immutable
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                profiles = list(pool.map(self._profile_only, specs))
         self._last = self._as_result(specs, profiles)
         return self._last
 
@@ -327,11 +363,31 @@ class Session:
         )
 
     def _profile_only(self, spec: WorkloadSpec) -> profiler.WorkloadProfile:
-        return self._profile_counters(self.collect(spec))
+        return self._profile_counters(self._collect_memoized(spec))
+
+    def _collect_memoized(self, spec: WorkloadSpec) -> CounterSet:
+        """``collect`` with the per-session content-hash cache in front.
+
+        Hits are *relabeled copies*: the fingerprint excludes the label,
+        so the cached counters may carry another point's name.  Specs
+        whose content cannot be hashed (``fingerprint() is None``) bypass
+        the cache entirely.
+        """
+        fp = spec.fingerprint()
+        if fp is None:
+            return self.collect(spec)
+        key = (self.provider.name, fp)
+        with self._memo_lock:
+            hit = self._collect_memo.get(key)
+        if hit is None:
+            hit = self.collect(spec)
+            with self._memo_lock:
+                self._collect_memo[key] = hit
+        return dataclasses.replace(hit, label=spec.label)
 
     def _as_result(self, specs, profiles) -> SweepResult:
         verdicts = [bottleneck.classify(p) for p in profiles]
-        shifts = bottleneck.detect_shifts(profiles)
+        shifts = bottleneck.detect_shifts(profiles, tol=self.shift_tol)
         utilization = profiler.utilization_sweep(profiles)
         speedups = np.array([
             bottleneck.speedup_estimate(profiles[0], p) for p in profiles])
@@ -339,3 +395,32 @@ class Session:
             device=self.device, specs=list(specs), profiles=list(profiles),
             verdicts=verdicts, shifts=shifts, utilization=utilization,
             speedup_vs_first=speedups)
+
+
+def sweep_grid(base: WorkloadSpec, axes: Optional[dict] = None, *,
+               devices: Sequence[Union[str, Device]] = ("v5e",),
+               provider: Union[str, CounterProvider] = "trace",
+               parallel: Optional[int] = None,
+               **session_kw) -> dict[str, SweepResult]:
+    """Expand a base spec over a parameter grid and sweep it per device.
+
+    The grid engine's one-call form: ``axes`` are ``WorkloadSpec.grid``
+    axes (spec fields -> value lists), ``devices`` is the outermost axis
+    (each device is its own ``Session`` — a service-time table is a
+    per-device artifact, so a device cannot be an in-spec axis).  Returns
+    ``{device_name: SweepResult}`` in the given device order::
+
+        results = sweep_grid(
+            WorkloadSpec.from_indices(idx, 256, label="uniform"),
+            {"waves_per_tile": [4, 8, 32], "pipeline_depth": [2, 4]},
+            devices=("v5e", "v5p"), parallel=8)
+
+    Extra keyword arguments are forwarded to each ``Session`` (e.g.
+    ``cache_dir``, ``use_true_n``, ``shift_tol``).
+    """
+    specs = base.grid(**axes) if axes else [base]
+    out: dict[str, SweepResult] = {}
+    for dev in devices:
+        sess = Session(dev, provider=provider, **session_kw)
+        out[sess.device.name] = sess.sweep(specs, parallel=parallel)
+    return out

@@ -22,6 +22,8 @@ and the same spec — the model-vs-measured split the paper's validation
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import itertools
 from typing import Any, Optional
 
 import numpy as np
@@ -96,6 +98,76 @@ class WorkloadSpec:
     def with_(self, **changes) -> "WorkloadSpec":
         """Frozen-friendly variant derivation (sweeps, relabeling)."""
         return dataclasses.replace(self, **changes)
+
+    def grid(self, **axes) -> list["WorkloadSpec"]:
+        """Cartesian expansion of this spec over parameter axes.
+
+        Each keyword names a spec field and supplies the values to sweep;
+        the product is expanded in the given axis order (last axis fastest)
+        and every point is relabeled ``label[k=v,...]`` so sweep reports
+        and shift events stay self-describing::
+
+            spec.grid(waves_per_tile=[4, 8, 32], pipeline_depth=[2, 4])
+            # -> 6 specs, labels like "solid[waves_per_tile=4,pipeline_depth=2]"
+
+        Pair with ``Session.sweep`` (or ``sweep_grid`` for a device axis).
+        """
+        for k in axes:
+            if k not in {f.name for f in dataclasses.fields(self)}:
+                raise ValueError(
+                    f"grid axis {k!r} is not a WorkloadSpec field")
+        keys = list(axes)
+        out = []
+        for combo in itertools.product(*(axes[k] for k in keys)):
+            changes = dict(zip(keys, combo))
+            suffix = ",".join(f"{k}={v}" for k, v in changes.items())
+            out.append(self.with_(label=f"{self.label}[{suffix}]", **changes))
+        return out
+
+    def fingerprint(self) -> Optional[str]:
+        """Content hash of everything a provider's ``collect`` reads.
+
+        Keys the sweep engine's per-point memoization: two specs with the
+        same fingerprint yield the same ``CounterSet`` from a (stateless)
+        provider, so a repeated grid point or a re-run sweep is served
+        from cache.  The label is deliberately *excluded* — it names the
+        point but does not change the measurement (the cache relabels).
+        Opaque sources (``run`` callables, ``compiled`` artifacts) are not
+        hashable by content: returns ``None``, meaning "never memoize".
+        """
+        if self.run is not None or self.compiled is not None:
+            return None
+        h = hashlib.sha256()
+
+        def put(*parts) -> None:
+            for part in parts:
+                if isinstance(part, np.ndarray):
+                    arr = np.ascontiguousarray(part)
+                    h.update(str(arr.dtype).encode())
+                    h.update(str(arr.shape).encode())
+                    h.update(arr.tobytes())
+                else:
+                    h.update(repr(part).encode())
+                h.update(b"|")
+
+        if self.trace is not None:
+            put("trace", self.trace.degree, self.trace.job_class,
+                self.trace.core, self.trace.lanes_active,
+                self.trace.waves_per_tile, self.trace.pipeline_depth)
+        elif self.indices is not None:
+            put("indices", np.asarray(self.indices))
+        elif self.kernel is not None:
+            put("kernel", self.kernel.op)
+            for k in sorted(self.kernel.params):
+                v = self.kernel.params[k]
+                v = np.asarray(v) if hasattr(v, "shape") else v
+                put(k, v)
+        elif self.hlo_text is not None:
+            put("hlo", self.hlo_text)
+        put(self.num_bins, self.job_class, self.waves_per_tile,
+            self.pipeline_depth, self.num_cores, self.num_devices,
+            self.bytes_read, self.flops, self.overhead_cycles)
+        return h.hexdigest()
 
     def resolve_trace(self) -> counters_mod.WaveTrace:
         """Materialize the wave trace with this spec's geometry applied.

@@ -1,0 +1,9 @@
+"""Command-line front-end over the ``repro.analysis`` Session API.
+
+``python -m repro <command>`` (or ``python -m repro.cli``) exposes the
+paper's tools without writing Python: see ``repro.cli.main`` for the
+subcommands and ``repro.cli.workloads`` for the declarative workload
+arguments.  Import surface: ``main(argv) -> int``.
+"""
+
+from repro.cli.main import build_parser, main  # noqa: F401

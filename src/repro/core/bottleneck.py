@@ -40,7 +40,8 @@ class ShiftEvent:
 
 def classify(profile: WorkloadProfile) -> BottleneckVerdict:
     name = profile.bottleneck
-    u = profile.unit(name).utilization if profile.units else 0.0
+    # "none" (every unit idle) is a verdict, not a unit: look it up safely
+    u = _unit_utilization(profile, name) if profile.units else 0.0
     if u >= SATURATED:
         comment = f"{name} saturated — optimizing other units will not help"
     elif u <= UNDERUTILIZED:
@@ -53,20 +54,63 @@ def classify(profile: WorkloadProfile) -> BottleneckVerdict:
                              comment=comment)
 
 
-def detect_shifts(profiles: Sequence[WorkloadProfile]) -> list[ShiftEvent]:
-    """Find sweep points where the dominant unit changes."""
+SHIFT_TOL = 0.02   # relative lead a new unit needs to count as a shift
+
+
+def _unit_utilization(profile: WorkloadProfile, name: str) -> float:
+    try:
+        return profile.unit(name).utilization
+    except KeyError:
+        return 0.0
+
+
+def detect_shifts(profiles: Sequence[WorkloadProfile],
+                  tol: float = SHIFT_TOL) -> list[ShiftEvent]:
+    """Find sweep points where the dominant unit changes.
+
+    A bare argmax flip is noisy: two unsaturated units within rounding
+    error of each other flip leadership from point to point without any
+    real change in what bounds the workload.  A shift therefore only
+    fires when the candidate unit *leads the currently held bottleneck by
+    a relative margin* of ``tol`` at that point; near-ties keep the held
+    unit (hysteresis), so a sweep through a crossover emits one event,
+    not a flicker of them.
+    """
     events = []
+    if not profiles:
+        return events
+    current = profiles[0].bottleneck
     for i in range(1, len(profiles)):
-        a, b = profiles[i - 1], profiles[i]
-        if a.bottleneck != b.bottleneck:
-            events.append(ShiftEvent(
-                index=i, label_before=a.label, label_after=b.label,
-                unit_before=a.bottleneck, unit_after=b.bottleneck))
+        b = profiles[i]
+        candidate = b.bottleneck
+        if candidate == current:
+            continue
+        u_new = _unit_utilization(b, candidate)
+        u_held = _unit_utilization(b, current)
+        if u_new <= u_held * (1.0 + tol):
+            continue   # within the tie margin: not a real shift
+        events.append(ShiftEvent(
+            index=i, label_before=profiles[i - 1].label, label_after=b.label,
+            unit_before=current, unit_after=candidate))
+        current = candidate
     return events
 
 
 def speedup_estimate(before: WorkloadProfile, after: WorkloadProfile) -> float:
-    """Predicted speedup of `after` over `before` from modeled windows."""
+    """Predicted speedup of `after` over `before` from modeled windows.
+
+    Two degenerate cases: both windows zero means "nothing modeled on
+    either side" and the only honest answer is parity (1.0), while a zero
+    ``after`` window against real ``before`` work is a broken profile —
+    an infinite speedup must never propagate silently into reports.
+    """
     t0 = float(np.max(before.T_cycles))
     t1 = float(np.max(after.T_cycles))
-    return t0 / t1 if t1 > 0 else float("inf")
+    if t1 > 0:
+        return t0 / t1
+    if t0 == 0:
+        return 1.0
+    raise ValueError(
+        f"speedup_estimate: profile {after.label!r} has a zero modeled "
+        f"window (T_cycles all zero) — cannot report a finite speedup "
+        f"over {before.label!r}")

@@ -153,6 +153,29 @@ def concat_traces(traces: Sequence[WaveTrace]) -> WaveTrace:
     )  # geometry from the first trace: concat is per-launch, not cross-launch
 
 
+def _degrees_full_waves(idx2d: np.ndarray, group: int,
+                        chunk: int = 512) -> np.ndarray:
+    """``wave_degree`` for a (W, wave) block of *complete* waves at once.
+
+    Bit-identical to calling ``wave_degree`` per row (same multiplicity
+    sums, same per-wave mean over the same group axis), but issued as a
+    few large numpy ops instead of W small ones: the hot path of trace
+    synthesis drops from Python-loop speed to memory bandwidth, and the
+    big ops release the GIL — which is what lets ``Session.sweep``'s
+    thread pool actually overlap points.  Chunked to bound the (chunk, G,
+    group, group) comparison tensor's working set.
+    """
+    W, wave = idx2d.shape
+    out = np.empty(W, np.float64)
+    G = wave // group
+    for s in range(0, W, chunk):
+        g = idx2d[s:s + chunk].reshape(-1, G, group)
+        eq = g[:, :, :, None] == g[:, :, None, :]
+        mult = eq.sum(axis=3)
+        out[s:s + chunk] = mult.max(axis=2).mean(axis=1)
+    return out
+
+
 def trace_from_indices(
     indices: np.ndarray,
     num_bins: int,
@@ -177,7 +200,14 @@ def trace_from_indices(
     num_waves = max(1, -(-n // wave))
     degree = np.empty(num_waves, np.float64)
     active = np.empty(num_waves, np.float64)
-    for w in range(num_waves):
+    # complete waves go through the vectorized bulk path; at most one
+    # trailing partial wave (sentinel-padded) keeps the scalar one
+    full = n // wave if wave % COMMIT_GROUP == 0 else 0
+    if full:
+        degree[:full] = _degrees_full_waves(
+            idx[:full * wave].reshape(full, wave), COMMIT_GROUP)
+        active[:full] = wave
+    for w in range(full, num_waves):
         part = idx[w * wave:(w + 1) * wave]
         active[w] = part.shape[0]
         degree[w] = wave_degree(part)

@@ -258,8 +258,28 @@ def profile_compiled_step(
 def utilization_sweep(
     profiles: Sequence[WorkloadProfile],
 ) -> dict[str, np.ndarray]:
-    """Stack unit utilizations across a parameter sweep (for Figs. 3-4)."""
-    names = [u.name for u in profiles[0].units]
-    out = {n: np.array([p.unit(n).utilization for p in profiles]) for n in names}
+    """Stack unit utilizations across a parameter sweep (for Figs. 3-4).
+
+    Unit membership is the *union* across all points, in first-appearance
+    order, with 0.0 filled where a point lacks the unit — heterogeneous
+    sweeps (e.g. mixing an HLO-only point into a scatter sweep, or custom
+    profiles with extra servers) must not KeyError on names the first
+    profile happens to miss.  An empty sweep has no axes to stack: ``{}``.
+    """
+    if not profiles:
+        return {}
+    names: list[str] = []
+    for p in profiles:
+        for u in p.units:
+            if u.name not in names:
+                names.append(u.name)
+
+    def util(p: WorkloadProfile, name: str) -> float:
+        try:
+            return p.unit(name).utilization
+        except KeyError:
+            return 0.0
+
+    out = {n: np.array([util(p, n) for p in profiles]) for n in names}
     out["scatter_model"] = np.array([p.scatter_utilization for p in profiles])
     return out

@@ -277,6 +277,122 @@ def test_render_unknown_fmt_raises(sess):
         sess.last.render("yaml")
 
 
+# -- grid-sweep engine --------------------------------------------------------
+
+
+def test_spec_grid_cartesian_labels():
+    spec = WorkloadSpec.from_indices(_solid(4), 256, label="base")
+    grid = spec.grid(waves_per_tile=[4, 8], pipeline_depth=[2, 4])
+    assert len(grid) == 4
+    assert grid[0].label == "base[waves_per_tile=4,pipeline_depth=2]"
+    assert grid[-1].label == "base[waves_per_tile=8,pipeline_depth=4]"
+    assert (grid[-1].waves_per_tile, grid[-1].pipeline_depth) == (8, 4)
+    assert spec.waves_per_tile is None  # base untouched
+
+
+def test_spec_grid_unknown_axis_raises():
+    spec = WorkloadSpec.from_indices(_solid(4), 256, label="base")
+    with pytest.raises(ValueError, match="not a WorkloadSpec field"):
+        spec.grid(wpt=[4, 8])
+
+
+def test_spec_fingerprint_content_keyed():
+    a = WorkloadSpec.from_indices(_solid(4), 256, label="a",
+                                  waves_per_tile=8)
+    b = WorkloadSpec.from_indices(_solid(4), 256, label="b",
+                                  waves_per_tile=8)
+    c = WorkloadSpec.from_indices(_solid(4), 256, label="a",
+                                  waves_per_tile=16)
+    d = WorkloadSpec.from_indices(_uniform(4), 256, label="a",
+                                  waves_per_tile=8)
+    assert a.fingerprint() == b.fingerprint()      # label-independent
+    assert a.fingerprint() != c.fingerprint()      # geometry matters
+    assert a.fingerprint() != d.fingerprint()      # content matters
+    assert WorkloadSpec(label="r", run=lambda: None).fingerprint() is None
+
+
+def test_sweep_parallel_matches_serial(sess):
+    specs = WorkloadSpec.from_indices(
+        _uniform(), 256, label="u").grid(waves_per_tile=[2, 4, 8, 16, 32],
+                                         pipeline_depth=[2, 4])
+    serial = Session("v5e", table=sess.table).sweep(specs)
+    parallel = Session("v5e", table=sess.table).sweep(specs, parallel=8)
+    assert len(parallel) == 10
+    assert [p.label for p in parallel.profiles] == \
+        [p.label for p in serial.profiles]          # order preserved
+    np.testing.assert_array_equal(parallel.speedup_vs_first,
+                                  serial.speedup_vs_first)
+    for a, b in zip(serial.profiles, parallel.profiles):
+        assert a.scatter_utilization == b.scatter_utilization
+        np.testing.assert_array_equal(a.T_cycles, b.T_cycles)
+
+
+def test_sweep_memoizes_by_content(sess):
+    """Repeated points are collected once and served relabeled."""
+    calls = []
+    inner = sess.provider
+
+    class Counting:
+        name = "counting"
+
+        def collect(self, spec, device):
+            calls.append(spec.label)
+            return inner.collect(spec, device)
+
+    sess.provider = Counting()
+    spec = WorkloadSpec.from_indices(_uniform(), 256, label="a",
+                                     waves_per_tile=8)
+    sess.sweep([spec, spec.with_(label="b")])
+    assert calls == ["a"]                       # second point: cache hit
+    assert [p.label for p in sess.last.profiles] == ["a", "b"]
+    sess.sweep([spec.with_(label="c")])
+    assert calls == ["a"]                       # re-run: still cached
+    sess.sweep([spec.with_(waves_per_tile=16, label="d")])
+    assert calls == ["a", "d"]                  # new content: collected
+
+
+def test_sweep_grid_per_device(tmp_path):
+    from repro.analysis import sweep_grid
+    device_mod._TABLE_MEMO.clear()
+    base = WorkloadSpec.from_indices(_uniform(), 256, label="u")
+    results = sweep_grid(base, {"waves_per_tile": [4, 32]},
+                         devices=("v5e", "v5p"), parallel=2,
+                         cache_dir=tmp_path)
+    assert list(results) == ["v5e", "v5p"]
+    for res in results.values():
+        assert len(res) == 2
+        assert res.profiles[0].label == "u[waves_per_tile=4]"
+
+
+def test_render_csv_ragged_union_columns():
+    """Rows with later-only U_* columns must render, empty-filled (fix)."""
+    import csv as csv_mod
+    import io
+
+    import repro.core.profiler as prof_mod
+    from repro.analysis.session import SweepResult
+    from repro.core import bottleneck as bn
+
+    def prof(label, units):
+        return prof_mod.WorkloadProfile(
+            label=label, per_core=[],
+            units=[prof_mod.UnitUtilization(n, b, 1000.0)
+                   for n, b in units.items()],
+            T_cycles=np.array([1000.0]))
+
+    profiles = [prof("a", {"scatter": 500.0}),
+                prof("b", {"scatter": 100.0, "ici": 700.0})]
+    result = SweepResult(
+        device=get_device("v5e"), specs=[], profiles=profiles,
+        verdicts=[bn.classify(p) for p in profiles], shifts=[],
+        utilization={}, speedup_vs_first=np.array([1.0, 1.0]))
+    text = result.render("csv")
+    rows = list(csv_mod.DictReader(io.StringIO(text)))
+    assert "U_ici" in rows[0]
+    assert rows[0]["U_ici"] == ""           # missing cell: empty, not crash
+    assert float(rows[1]["U_ici"]) == 0.7
+
+
 # -- deprecation shims --------------------------------------------------------
 
 

@@ -1,8 +1,9 @@
 """Shift detection + speedup estimation (paper §4.1) on synthetic profiles."""
 
 import numpy as np
+import pytest
 
-from repro.core import bottleneck
+from repro.core import bottleneck, profiler
 from repro.core.profiler import UnitUtilization, WorkloadProfile
 
 
@@ -50,16 +51,95 @@ def test_detect_shifts_multi_shift():
         (1, "scatter", "hbm"), (2, "hbm", "mxu")]
 
 
+def test_detect_shifts_near_tie_is_not_a_shift():
+    """An argmax flip within the tie margin must not fire (satellite fix)."""
+    profiles = [
+        _prof("a", {"scatter": 500.0, "hbm": 495.0}),
+        _prof("b", {"scatter": 495.0, "hbm": 500.0}),   # 1% lead: noise
+        _prof("c", {"scatter": 500.0, "hbm": 496.0}),
+    ]
+    assert bottleneck.detect_shifts(profiles) == []
+
+
+def test_detect_shifts_margin_crossing_fires_once():
+    """Hysteresis: a genuine crossover emits one event, not a flicker."""
+    profiles = [
+        _prof("a", {"scatter": 600, "hbm": 300}),
+        _prof("b", {"scatter": 500, "hbm": 502}),   # tie: held
+        _prof("c", {"scatter": 502, "hbm": 500}),   # tie: held
+        _prof("d", {"scatter": 300, "hbm": 600}),   # real lead: fires
+    ]
+    events = bottleneck.detect_shifts(profiles)
+    assert [(e.index, e.unit_before, e.unit_after) for e in events] == [
+        (3, "scatter", "hbm")]
+    assert events[0].label_before == "c"
+
+
+def test_detect_shifts_tol_is_configurable():
+    profiles = [
+        _prof("a", {"scatter": 500, "hbm": 450}),
+        _prof("b", {"scatter": 450, "hbm": 500}),   # ~11% lead
+    ]
+    assert len(bottleneck.detect_shifts(profiles, tol=0.02)) == 1
+    assert bottleneck.detect_shifts(profiles, tol=0.20) == []
+
+
+def test_detect_shifts_heterogeneous_units_no_keyerror():
+    """A held unit missing from a later profile counts as zero, not a crash."""
+    profiles = [
+        _prof("a", {"scatter": 900, "hbm": 100}),
+        _prof("b", {"hbm": 900, "mxu": 100}),   # no scatter unit at all
+    ]
+    [event] = bottleneck.detect_shifts(profiles)
+    assert (event.unit_before, event.unit_after) == ("scatter", "hbm")
+
+
 def test_speedup_estimate_ratio():
     before = _prof("before", {"scatter": 900}, window=2000.0)
     after = _prof("after", {"scatter": 900}, window=500.0)
     assert bottleneck.speedup_estimate(before, after) == 4.0
 
 
-def test_speedup_estimate_zero_window_guard():
+def test_speedup_estimate_zero_over_zero_is_parity():
+    """0/0 means nothing modeled either side: parity, not inf (satellite)."""
+    a = _prof("a", {}, window=0.0)
+    b = _prof("b", {}, window=0.0)
+    assert bottleneck.speedup_estimate(a, b) == 1.0
+
+
+def test_speedup_estimate_zero_after_window_raises():
+    """A zero 'after' window must not silently report infinite speedup."""
     before = _prof("before", {"scatter": 900}, window=2000.0)
     degenerate = _prof("after", {}, window=0.0)
-    assert bottleneck.speedup_estimate(before, degenerate) == float("inf")
+    with pytest.raises(ValueError, match="zero modeled window"):
+        bottleneck.speedup_estimate(before, degenerate)
+
+
+def test_speedup_estimate_zero_before_is_zero():
+    before = _prof("before", {}, window=0.0)
+    after = _prof("after", {"scatter": 900}, window=500.0)
+    assert bottleneck.speedup_estimate(before, after) == 0.0
+
+
+# -- utilization_sweep robustness (satellite fix) -----------------------------
+
+
+def test_utilization_sweep_empty_returns_empty():
+    assert profiler.utilization_sweep([]) == {}
+
+
+def test_utilization_sweep_heterogeneous_units_union_fill():
+    """Later-only units appear zero-filled; missing units read 0.0."""
+    profiles = [
+        _prof("a", {"scatter": 500, "hbm": 100}),
+        _prof("b", {"hbm": 600, "ici": 300}),    # no scatter; new: ici
+    ]
+    out = profiler.utilization_sweep(profiles)
+    assert set(out) == {"scatter", "hbm", "ici", "scatter_model"}
+    np.testing.assert_allclose(out["scatter"], [0.5, 0.0])
+    np.testing.assert_allclose(out["hbm"], [0.1, 0.6])
+    np.testing.assert_allclose(out["ici"], [0.0, 0.3])
+    assert out["hbm"].shape == (2,)
 
 
 def test_classify_underutilized_comment():

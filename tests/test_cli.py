@@ -1,0 +1,324 @@
+"""CLI smoke + equivalence tests: every subcommand, every format.
+
+Most tests drive ``repro.cli.main(argv)`` in-process (fast, debuggable);
+one subprocess test proves the ``python -m repro`` entry point itself
+(module ``__main__`` wiring, import order) stays launchable.
+"""
+
+import csv as csv_mod
+import io
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis import Session, WorkloadSpec, get_device
+from repro.cli import build_parser, main
+from repro.core.profiler import CacheModel
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(autouse=True)
+def _isolate_artifacts(tmp_path, monkeypatch):
+    """Default results/cli artifacts land in a tmpdir, not the repo."""
+    monkeypatch.setenv("REPRO_RESULTS", str(tmp_path / "results"))
+    yield
+
+
+def run_cli(argv, capsys):
+    rc = main(argv)
+    out = capsys.readouterr().out
+    return rc, out
+
+
+# -- devices ------------------------------------------------------------------
+
+
+def test_devices_text(capsys):
+    rc, out = run_cli(["devices"], capsys)
+    assert rc == 0
+    assert "v5e" in out and "v5p" in out
+    assert "registered device(s)" in out
+
+
+def test_devices_json(capsys):
+    rc, out = run_cli(["devices", "--format", "json"], capsys)
+    assert rc == 0
+    rows = json.loads(out)
+    assert {r["name"] for r in rows} >= {"v5e", "v5p"}
+    assert {"description", "cores", "clock_ghz", "table_cached"} \
+        <= set(rows[0])
+
+
+def test_python_m_repro_subprocess():
+    """The real entry point: ``python -m repro`` must stay launchable."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "devices"],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert "v5e" in proc.stdout
+
+
+# -- profile ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["text", "json", "csv"])
+def test_profile_indices_formats(capsys, fmt):
+    rc, out = run_cli([
+        "profile", "--workload", "indices", "--size", "2^14",
+        "--dist", "solid", "--waves-per-tile", "32", "--format", fmt], capsys)
+    assert rc == 0
+    if fmt == "json":
+        payload = json.loads(out)
+        assert payload["points"][0]["bottleneck"] == "scatter"
+    elif fmt == "csv":
+        rows = list(csv_mod.DictReader(io.StringIO(out)))
+        assert rows[0]["bottleneck"] == "scatter"
+    else:
+        assert "scatter" in out
+
+
+def test_profile_histogram_variant(capsys):
+    rc, out = run_cli([
+        "profile", "--workload", "histogram", "--pixels", "2^12",
+        "--dist", "solid", "--variant", "hist2", "--format", "json"], capsys)
+    assert rc == 0
+    assert "hist2" in json.loads(out)["points"][0]["label"]
+
+
+def test_profile_scatter(capsys):
+    rc, out = run_cli([
+        "profile", "--workload", "scatter", "--size", "2^13",
+        "--num-segments", "64", "--format", "json"], capsys)
+    assert rc == 0
+    assert json.loads(out)["points"][0]["e"] > 1.0
+
+
+def test_profile_output_file(capsys, tmp_path):
+    out_file = tmp_path / "report.json"
+    rc, out = run_cli([
+        "profile", "--size", "2^12", "--format", "json",
+        "--output", str(out_file)], capsys)
+    assert rc == 0
+    assert json.loads(out_file.read_text()) == json.loads(out)
+
+
+def test_profile_rejects_multi_values(capsys):
+    rc = main(["profile", "--size", "4096"])
+    assert rc == 0
+    # nargs is single-valued on profile: a second value is an argparse error
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["profile", "--size", "4096", "8192"])
+    capsys.readouterr()
+
+
+def test_unknown_device_is_a_clean_error(capsys):
+    rc = main(["profile", "--size", "2^12", "--device", "h100"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert "h100" in err and "v5e" in err
+
+
+# -- sweep --------------------------------------------------------------------
+
+
+def test_sweep_grid_concurrent_roundtrip(capsys):
+    """Acceptance: >=8-point grid, concurrent, csv and json round-trip."""
+    argv = ["sweep", "--workload", "indices", "--size", "2^13", "2^14",
+            "--dist", "uniform", "--waves-per-tile", "4", "8", "16", "32",
+            "--jobs", "4", "--no-artifact"]
+    rc, out = run_cli(argv + ["--format", "csv"], capsys)
+    assert rc == 0
+    rows = list(csv_mod.DictReader(io.StringIO(out)))
+    assert len(rows) == 8                    # 2 sizes x 4 occupancies
+    assert {"label", "bottleneck", "U_scatter", "e"} <= set(rows[0])
+    assert all(float(r["U_scatter"]) >= 0 for r in rows)
+
+    rc, out = run_cli(argv + ["--format", "json"], capsys)
+    assert rc == 0
+    payload = json.loads(out)
+    assert len(payload["points"]) == 8
+    assert [p["label"] for p in payload["points"]] == \
+        [r["label"] for r in rows]           # same order both formats
+
+
+def test_sweep_matches_session_api(capsys, tmp_path):
+    """CLI sweep numbers are bit-identical to the Session API's."""
+    rc, out = run_cli([
+        "sweep", "--size", "2^14", "--dist", "uniform", "--seed", "3",
+        "--waves-per-tile", "4", "8", "--format", "json", "--no-artifact"],
+        capsys)
+    assert rc == 0
+    cli_points = json.loads(out)["points"]
+
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, 256, 1 << 14)
+    specs = WorkloadSpec.from_indices(
+        idx, 256, label="uniform-16384").grid(waves_per_tile=[4, 8])
+    api = Session("v5e").sweep(specs)
+    for got, prof in zip(cli_points, api.profiles):
+        assert got["label"] == prof.label
+        assert got["scatter_model_U"] == prof.scatter_utilization  # bit-equal
+        assert got["e"] == prof.e
+
+
+def test_sweep_text_format_and_artifact(capsys, tmp_path):
+    out_file = tmp_path / "sweep.txt"
+    rc, out = run_cli([
+        "sweep", "--size", "2^13", "--waves-per-tile", "4", "8",
+        "--output", str(out_file)], capsys)
+    assert rc == 0
+    assert "sweep on v5e (2 points)" in out
+    assert out_file.read_text() == out
+
+
+def test_sweep_multi_device_csv(capsys):
+    rc, out = run_cli([
+        "sweep", "--size", "2^13", "--waves-per-tile", "4", "8",
+        "--devices", "v5e", "v5p", "--format", "csv", "--no-artifact"],
+        capsys)
+    assert rc == 0
+    rows = list(csv_mod.DictReader(io.StringIO(out)))
+    assert len(rows) == 4
+    assert [r["device"] for r in rows] == ["v5e", "v5e", "v5p", "v5p"]
+
+
+def test_sweep_user_label_stays_unique_per_size(capsys):
+    """--label + multi-value sizes must not collapse rows to one name."""
+    rc, out = run_cli([
+        "sweep", "--size", "2^13", "2^14", "--label", "foo",
+        "--format", "csv", "--no-artifact"], capsys)
+    assert rc == 0
+    labels = [r["label"] for r in csv_mod.DictReader(io.StringIO(out))]
+    assert labels == ["foo-8192", "foo-16384"]
+    # single point: the label is used verbatim
+    rc, out = run_cli([
+        "profile", "--size", "2^13", "--label", "foo", "--format", "json"],
+        capsys)
+    assert json.loads(out)["points"][0]["label"] == "foo"
+
+
+def test_sweep_default_artifact_under_results(capsys, tmp_path):
+    rc, _ = run_cli(["sweep", "--size", "2^12", "--format", "csv"], capsys)
+    assert rc == 0
+    artifact = tmp_path / "results" / "cli" / "sweep-v5e.csv"
+    assert artifact.exists()
+    assert list(csv_mod.DictReader(io.StringIO(artifact.read_text())))
+
+
+# -- validate -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["text", "json"])
+def test_validate_trace_vs_kernel(capsys, fmt):
+    rc, out = run_cli([
+        "validate", "--workload", "histogram", "--pixels", "2^12",
+        "--dist", "solid", "--format", fmt], capsys)
+    assert rc == 0
+    if fmt == "json":
+        payload = json.loads(out)
+        assert payload["reference"] == "trace"
+        kernel = [c for c in payload["comparisons"]
+                  if c["provider"] == "kernel"][0]
+        assert kernel["rel_err"]["e"] == 0.0     # paper §5: exact match
+    else:
+        assert "max relative error: 0.00%" in out
+
+
+def test_validate_hlo_workload_autoroutes(capsys, tmp_path):
+    hlo = tmp_path / "mod.txt"
+    hlo.write_text(
+        "HloModule m\nENTRY e {\n  p = f32[128,128]{1,0} parameter(0)\n  "
+        "ROOT a = f32[128,128]{1,0} add(p, p)\n}\n")
+    rc, out = run_cli([
+        "profile", "--workload", "hlo", "--hlo-file", str(hlo),
+        "--format", "json"], capsys)
+    assert rc == 0
+    point = json.loads(out)["points"][0]
+    assert point["bottleneck"] in ("hbm", "mxu", "none")
+
+
+# -- compare ------------------------------------------------------------------
+
+
+def _compare_argv(fmt):
+    return ["compare", "--device", "v5e", "--kind", "solid",
+            "--pixels", "2^12", "2^14", "--format", fmt, "--no-artifact"]
+
+
+@pytest.mark.parametrize("fmt", ["text", "json", "csv"])
+def test_compare_formats(capsys, fmt):
+    rc, out = run_cli(_compare_argv(fmt), capsys)
+    assert rc == 0
+    if fmt == "json":
+        payload = json.loads(out)
+        assert {"device", "points", "size_shifts", "verdict"} == set(payload)
+        assert len(payload["points"]) == 2
+    elif fmt == "csv":
+        rows = list(csv_mod.DictReader(io.StringIO(out)))
+        assert len(rows) == 2
+        assert {"kind", "pixels", "hist_U", "hist2_U", "speedup",
+                "shift"} <= set(rows[0])
+    else:
+        assert "verdict:" in out and "hist2" in out
+
+
+def test_compare_bit_identical_to_session_api(capsys):
+    """Acceptance: compare == the Session API run of the same specs."""
+    rc, out = run_cli(_compare_argv("json"), capsys)
+    assert rc == 0
+    points = json.loads(out)["points"]
+
+    device = get_device("v5e").with_(cache=CacheModel(
+        llc_bytes=1 << 21, miss_latency_cycles=800, hide_concurrency=48))
+    sess = Session(device)
+    from repro.data.images import make_image
+    for point in points:
+        px = int(point["pixels"])
+        img = make_image("solid", px, seed=0)
+        pair = [WorkloadSpec.from_histogram(
+                    img, label=f"solid/{px}px/{v}", variant=v,
+                    waves_per_tile=8)
+                for v in ("hist", "hist2")]
+        result = sess.sweep(pair)
+        h, h2 = result.profiles
+        assert point["hist_U"] == h.scatter_utilization          # bit-equal
+        assert point["hist2_U"] == h2.scatter_utilization
+        assert point["speedup"] == float(result.speedup_vs_first[1])
+        assert point["hist_bottleneck"] == h.bottleneck
+
+
+def test_compare_solid_speedup_exceeds_uniform(capsys):
+    rc, out = run_cli([
+        "compare", "--kind", "solid", "uniform", "--pixels", "2^14",
+        "--format", "json", "--no-artifact"], capsys)
+    assert rc == 0
+    points = json.loads(out)["points"]
+    by_kind = {p["kind"]: p for p in points}
+    # reordering pays where contention is: solid >> uniform
+    assert by_kind["solid"]["speedup"] > by_kind["uniform"]["speedup"]
+
+
+# -- help text ----------------------------------------------------------------
+
+
+def test_help_lists_all_subcommands(capsys):
+    with pytest.raises(SystemExit):
+        main(["--help"])
+    out = capsys.readouterr().out
+    for cmd in ("devices", "profile", "sweep", "validate", "compare"):
+        assert cmd in out
+
+
+@pytest.mark.parametrize(
+    "cmd", ["devices", "profile", "sweep", "validate", "compare"])
+def test_subcommand_help(capsys, cmd):
+    with pytest.raises(SystemExit):
+        main([cmd, "--help"])
+    out = capsys.readouterr().out
+    assert "--format" in out
