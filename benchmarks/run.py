@@ -12,6 +12,10 @@ Prints ``name,us_per_call,derived`` CSV rows (spec format):
                                 (framework integration of the model)
   * sweep_grid_parallel       — grid-sweep engine: serial vs concurrent
                                 vs memoized collection (CLI fast path)
+  * profile_batch_vs_loop     — columnar batch profiler vs the per-point
+                                scalar loop on a 64-point grid, plus
+                                cold/warm persistent sweep-cache timings
+                                (CI perf canary via --min-batch-speedup)
   * kernel_walltime           — interpret-mode Pallas kernel wall times
                                 (regression canary; not TPU numbers)
   * roofline_table            — per (arch x shape x mesh) terms from the
@@ -195,6 +199,73 @@ def sweep_grid_parallel() -> None:
          f"memo_speedup={us_serial / max(us_memo, 1e-9):.1f}x")
 
 
+LAST_BATCH_SPEEDUP: float | None = None
+LAST_WARM_COLLECTED: int | None = None
+
+
+def profile_batch_vs_loop() -> None:
+    """Columnar batch profiler vs the scalar per-point loop (PR 4).
+
+    Model-evaluation phase only, on the reference 64-point grid: the same
+    collected ``CounterSet``s go through (a) ``profile_counters`` point by
+    point and (b) one ``CounterFrame`` + ``profile_batch`` pass (frame
+    construction included — it is part of the batch path).  Also times a
+    cold vs warm persistent sweep cache in a throwaway directory.  The
+    measured batch speedup and the warm-re-sweep collection count both
+    feed the ``--min-batch-speedup`` CI canary (which fails on a
+    sub-threshold speedup OR a warm re-sweep that collected anything).
+    """
+    import shutil
+    import tempfile
+
+    from repro.core import profiler as prof_mod
+    from repro.core.counters import CounterFrame
+
+    rng = np.random.default_rng(0)
+    base = WorkloadSpec.from_indices(
+        rng.integers(0, 256, 1 << 15), 256, label="uniform-32K")
+    specs = base.grid(waves_per_tile=[1, 2, 4, 8, 16, 32, 64, 128],
+                      pipeline_depth=[1, 2, 4, 8],
+                      overhead_cycles=[500.0, 2000.0])
+    assert len(specs) == 64
+    sess = session()
+    csets = [sess.collect(s) for s in specs]
+    dev = sess.device
+    kw = dict(params=dev.scatter, chip=dev.chip, cache=dev.cache)
+
+    us_loop = _timeit(lambda: [prof_mod.profile_counters(c, sess.table, **kw)
+                               for c in csets])
+    us_batch = _timeit(lambda: prof_mod.profile_batch(
+        CounterFrame.from_sets(csets), sess.table, **kw))
+    speedup = us_loop / max(us_batch, 1e-9)
+    global LAST_BATCH_SPEEDUP
+    LAST_BATCH_SPEEDUP = speedup
+
+    tmp = tempfile.mkdtemp(prefix="repro-bench-sweepcache-")
+    try:
+        cold_sess = Session(device="v5e", persistent_cache=tmp)
+        t0 = time.perf_counter()
+        cold_sess.sweep(specs)
+        us_cold = (time.perf_counter() - t0) * 1e6
+        warm_sess = Session(device="v5e", persistent_cache=tmp)
+        t0 = time.perf_counter()
+        warm_sess.sweep(specs)
+        us_warm = (time.perf_counter() - t0) * 1e6
+        warm_collected = warm_sess.stats["collected"]
+        global LAST_WARM_COLLECTED
+        LAST_WARM_COLLECTED = warm_collected
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    emit("profile_batch_vs_loop_64pt", us_batch,
+         f"loop_us={us_loop:.0f};batch_us={us_batch:.0f};"
+         f"batch_speedup={speedup:.1f}x;"
+         f"cold_cache_sweep_us={us_cold:.0f};"
+         f"warm_cache_sweep_us={us_warm:.0f};"
+         f"warm_collected={warm_collected};"
+         f"warm_speedup={us_cold / max(us_warm, 1e-9):.1f}x")
+
+
 def kernel_walltime() -> None:
     img = jnp.asarray(make_image("uniform", 1 << 16))
     us = _timeit(lambda: hist_ops.histogram(img).block_until_ready())
@@ -236,18 +307,40 @@ def roofline_table() -> None:
 
 ALL = [fig1_service_time_table, fig3_utilization_sweep, fig4_popc_vs_fao,
        fig5_reorder_speedup, sec5_model_vs_measured, moe_dispatch_profile,
-       sweep_grid_parallel, kernel_walltime, roofline_table]
+       sweep_grid_parallel, profile_batch_vs_loop, kernel_walltime,
+       roofline_table]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--min-batch-speedup", type=float, default=None,
+                    help="perf canary: exit 1 if profile_batch_vs_loop "
+                         "measures less than this batch-vs-loop speedup "
+                         "(requires the benchmark to have run)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for fn in ALL:
         if args.only and args.only not in fn.__name__:
             continue
         fn()
+    if args.min_batch_speedup is not None:
+        import sys
+        if LAST_BATCH_SPEEDUP is None:
+            print("error: --min-batch-speedup set but profile_batch_vs_loop "
+                  "did not run", file=sys.stderr)
+            sys.exit(2)
+        if LAST_BATCH_SPEEDUP < args.min_batch_speedup:
+            print(f"error: batch path speedup {LAST_BATCH_SPEEDUP:.2f}x "
+                  f"below the {args.min_batch_speedup:.2f}x canary "
+                  f"threshold", file=sys.stderr)
+            sys.exit(1)
+        if LAST_WARM_COLLECTED:
+            print(f"error: warm-cache re-sweep collected "
+                  f"{LAST_WARM_COLLECTED} point(s), expected 0 — the "
+                  f"persistent sweep cache is not being hit",
+                  file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -36,6 +36,10 @@ from repro.analysis.providers import (  # noqa: F401
     get_provider,
     register_provider,
 )
+from repro.analysis.sweep_cache import (  # noqa: F401
+    SweepCache,
+    default_cache_root,
+)
 from repro.analysis.workload import KernelSource, WorkloadSpec  # noqa: F401
 from repro.analysis.session import (  # noqa: F401
     ProviderComparison,
@@ -44,3 +48,5 @@ from repro.analysis.session import (  # noqa: F401
     ValidationReport,
     sweep_grid,
 )
+from repro.core.counters import CounterFrame  # noqa: F401
+from repro.core.profiler import profile_batch  # noqa: F401

@@ -34,9 +34,10 @@ import numpy as np
 
 from repro.analysis.device import Device, get_device
 from repro.analysis.providers import CounterProvider, get_provider
+from repro.analysis.sweep_cache import SweepCache
 from repro.analysis.workload import WorkloadSpec
 from repro.core import bottleneck, profiler, qmodel
-from repro.core.counters import CounterSet
+from repro.core.counters import CounterFrame, CounterSet
 
 
 @dataclasses.dataclass
@@ -226,7 +227,9 @@ class Session:
                  table: Optional[qmodel.ServiceTimeTable] = None,
                  cache_dir=None, use_true_n: bool = False,
                  provider: Union[str, CounterProvider] = "trace",
-                 shift_tol: float = bottleneck.SHIFT_TOL) -> None:
+                 shift_tol: float = bottleneck.SHIFT_TOL,
+                 persistent_cache: Union[bool, str, SweepCache] = False,
+                 ) -> None:
         self.device = get_device(device)
         self.provider = get_provider(provider)
         self.table = table if table is not None \
@@ -237,6 +240,19 @@ class Session:
         # per-point memo for sweeps: (provider, fingerprint) -> CounterSet
         self._collect_memo: dict[tuple[str, str], CounterSet] = {}
         self._memo_lock = threading.Lock()
+        # cross-process counter cache (results/cache/): False = off,
+        # True = default root, or a path / SweepCache instance.  The CLI
+        # turns it on for sweeps; the Python API keeps it opt-in.
+        if isinstance(persistent_cache, SweepCache):
+            self.sweep_cache: Optional[SweepCache] = persistent_cache
+        elif persistent_cache:
+            self.sweep_cache = SweepCache(
+                None if persistent_cache is True else persistent_cache)
+        else:
+            self.sweep_cache = None
+        # collection accounting: how many points were actually collected
+        # vs served from the in-process memo / the on-disk sweep cache
+        self.stats = {"collected": 0, "memo_hits": 0, "disk_hits": 0}
 
     # -- the pipeline -----------------------------------------------------
 
@@ -248,8 +264,12 @@ class Session:
         return prov.collect(spec, self.device)
 
     def profile(self, spec: WorkloadSpec) -> profiler.WorkloadProfile:
-        """Run one spec through counters -> queue model -> utilization."""
-        prof = self._profile_only(spec)
+        """Run one spec through counters -> queue model -> utilization.
+
+        A single point is just a one-row ``CounterFrame`` through the
+        same columnar batch path sweeps use.
+        """
+        prof = self._profile_batch([self._collect_memoized(spec)])[0]
         self._last = self._as_result([spec], [prof])
         return prof
 
@@ -262,27 +282,29 @@ class Session:
               parallel: Optional[int] = None) -> SweepResult:
         """Profile every spec and analyze the sweep as a whole.
 
-        ``parallel`` collects points on a thread pool of that many workers
-        (counter acquisition — trace synthesis, interpret-mode kernel runs
-        — dominates sweep cost and is numpy/jax-bound, so threads overlap
-        it well); ``None``/``1`` keeps the serial path.  Either way points
-        are memoized by content fingerprint: a spec already collected by
-        this session (same provider) is served from cache and only
-        relabeled, so repeated grid points and re-runs are free.  Result
-        order always matches ``specs`` — parallelism never reorders.
+        Two phases.  *Collection*: counter acquisition (trace synthesis,
+        interpret-mode kernel runs) dominates sweep cost; ``parallel``
+        spreads it over a thread pool of that many workers
+        (``None``/``1`` keeps the serial path), points are memoized by
+        content fingerprint (a spec already collected by this session
+        and provider is served relabeled from cache), and with
+        ``persistent_cache`` set the memo extends across processes via
+        ``results/cache/``.  *Model evaluation*: all collected points go
+        through ``profiler.profile_batch`` as one columnar
+        ``CounterFrame`` pass — the whole §3 queue model in whole-array
+        numpy ops, point-for-point identical to the per-point path.
+        Result order always matches ``specs`` — neither phase reorders.
         """
         specs = list(specs)
         if not specs:
             raise ValueError("sweep() needs at least one WorkloadSpec")
         workers = min(parallel or 1, len(specs))
         if workers <= 1:
-            profiles = [self._profile_only(s) for s in specs]
+            csets = [self._collect_memoized(s) for s in specs]
         else:
-            # whole points (collect + profile) go to the pool: both phases
-            # are per-point independent, and the shared state they touch
-            # (memo dict, read-only table) is lock-protected/immutable
             with ThreadPoolExecutor(max_workers=workers) as pool:
-                profiles = list(pool.map(self._profile_only, specs))
+                csets = list(pool.map(self._collect_memoized, specs))
+        profiles = self._profile_batch(csets)
         self._last = self._as_result(specs, profiles)
         return self._last
 
@@ -310,7 +332,7 @@ class Session:
         if len(provs) < 2:
             raise ValueError("validate() needs at least two providers")
         csets = [p.collect(spec, self.device) for p in provs]
-        profiles = [self._profile_counters(c) for c in csets]
+        profiles = self._profile_batch(csets)
 
         def numbers(cset: CounterSet, prof) -> dict:
             return {
@@ -353,36 +375,70 @@ class Session:
 
     # -- internals --------------------------------------------------------
 
-    def _profile_counters(self, cset: CounterSet) -> profiler.WorkloadProfile:
-        return profiler.profile_counters(
-            cset, self.table,
-            params=self.device.scatter,
-            chip=self.device.chip,
-            cache=self.device.cache,
-            use_true_n=self.use_true_n,
-        )
+    def _profile_batch(self, csets: Sequence[CounterSet],
+                       ) -> list[profiler.WorkloadProfile]:
+        """Columnar model evaluation for many CounterSets at once.
 
-    def _profile_only(self, spec: WorkloadSpec) -> profiler.WorkloadProfile:
-        return self._profile_counters(self._collect_memoized(spec))
+        A ``CounterFrame`` is rectangular (points x cores), so a sweep
+        mixing core counts is grouped by ``num_cores`` first — each group
+        is one ``profile_batch`` pass, and results are reassembled in the
+        original point order.
+        """
+        profiles: list = [None] * len(csets)
+        by_cores: dict[int, list[int]] = {}
+        for i, cs in enumerate(csets):
+            by_cores.setdefault(cs.num_cores, []).append(i)
+        for idxs in by_cores.values():
+            frame = CounterFrame.from_sets([csets[i] for i in idxs])
+            outs = profiler.profile_batch(
+                frame, self.table,
+                params=self.device.scatter,
+                chip=self.device.chip,
+                cache=self.device.cache,
+                use_true_n=self.use_true_n,
+            )
+            for i, prof in zip(idxs, outs):
+                profiles[i] = prof
+        return profiles
 
     def _collect_memoized(self, spec: WorkloadSpec) -> CounterSet:
-        """``collect`` with the per-session content-hash cache in front.
+        """``collect`` with the content-hash caches in front.
 
-        Hits are *relabeled copies*: the fingerprint excludes the label,
-        so the cached counters may carry another point's name.  Specs
-        whose content cannot be hashed (``fingerprint() is None``) bypass
-        the cache entirely.
+        Resolution order: in-process memo -> on-disk ``SweepCache``
+        (when ``persistent_cache`` is enabled) -> the provider; misses
+        populate both layers.  Hits are *relabeled copies*: the
+        fingerprint excludes the label, so the cached counters may carry
+        another point's name.  Specs whose content cannot be hashed
+        (``fingerprint() is None``) bypass the caches entirely.
         """
         fp = spec.fingerprint()
         if fp is None:
+            with self._memo_lock:
+                self.stats["collected"] += 1
             return self.collect(spec)
         key = (self.provider.name, fp)
         with self._memo_lock:
             hit = self._collect_memo.get(key)
-        if hit is None:
-            hit = self.collect(spec)
+        if hit is not None:
             with self._memo_lock:
-                self._collect_memo[key] = hit
+                self.stats["memo_hits"] += 1
+            return dataclasses.replace(hit, label=spec.label)
+        disk_key = None
+        if self.sweep_cache is not None:
+            disk_key = self.sweep_cache.key(
+                self.provider.name, fp, self.device.table_key())
+            hit = self.sweep_cache.get(disk_key)
+            if hit is not None:
+                with self._memo_lock:
+                    self.stats["disk_hits"] += 1
+                    self._collect_memo[key] = hit
+                return dataclasses.replace(hit, label=spec.label)
+        hit = self.collect(spec)
+        with self._memo_lock:
+            self.stats["collected"] += 1
+            self._collect_memo[key] = hit
+        if self.sweep_cache is not None:
+            self.sweep_cache.put(disk_key, hit)
         return dataclasses.replace(hit, label=spec.label)
 
     def _as_result(self, specs, profiles) -> SweepResult:

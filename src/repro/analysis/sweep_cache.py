@@ -1,0 +1,187 @@
+"""Persistent cross-process counter cache for sweeps.
+
+``Session`` already memoizes collected ``CounterSet``s per process by
+content fingerprint; this module extends that memo across processes so a
+repeated CLI sweep (a new process every time) skips counter *collection*
+entirely and goes straight to the batch model evaluation.  Entries are
+one ``.npz`` per point under ``results/cache/`` (relocate with the
+``REPRO_RESULTS`` environment variable; clear by deleting the directory
+or via ``SweepCache.clear()``), keyed by
+
+    provider name + ``WorkloadSpec.fingerprint()`` + ``Device.table_key()``
+    + a content hash of the counter-producing source files
+
+so a different counter source, workload content, launch geometry,
+scatter-unit calibration, or collection *implementation* never collides
+(a PR that changes counter synthesis invalidates old entries by
+construction — stale numbers cannot survive a code change).  Specs whose content cannot be
+hashed (``fingerprint() is None``: opaque ``run`` callables, compiled
+artifacts) are never cached, mirroring the in-process memo.  Corrupt or
+truncated entries read as misses and are overwritten on the next
+collection — the cache is an accelerator, never a correctness input.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core.counters import CounterSet
+
+CACHE_VERSION = 1
+
+
+@functools.lru_cache(maxsize=1)
+def _collection_code_digest() -> str:
+    """Content hash of the counter-*producing* source files.
+
+    The spec fingerprint and device key capture the inputs to
+    ``collect``; this captures its implementation.  Folding it into
+    every cache key means a PR that changes counter synthesis (a
+    provider, the wave-degree math, a kernel's committed-stream mirror)
+    automatically invalidates stale cross-process entries — nobody has
+    to remember to bump ``CACHE_VERSION`` or clear ``results/cache/``.
+    Over-inclusion only costs a cold re-collection, so the whole kernels
+    package is hashed rather than chasing exact call graphs.
+    """
+    import repro.analysis.providers as providers_pkg
+    import repro.core.counters as counters_mod
+    import repro.kernels as kernels_pkg
+
+    paths = [Path(counters_mod.__file__)]
+    for pkg in (providers_pkg, kernels_pkg):
+        root = Path(pkg.__file__).parent
+        paths.extend(sorted(root.rglob("*.py")))
+    h = hashlib.sha256()
+    for p in paths:
+        h.update(str(p.name).encode())
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def results_root() -> Path:
+    """``results/`` at the repo root (``REPRO_RESULTS`` overrides).
+
+    The single resolution rule for where results live — the CLI's
+    artifact directory and this cache both resolve through here, so a
+    cache written by one surface is always found by the other.
+    """
+    env = os.environ.get("REPRO_RESULTS")
+    if env:
+        return Path(env)
+    return Path(__file__).resolve().parents[3] / "results"
+
+
+def default_cache_root() -> Path:
+    """``results/cache/`` under ``results_root()``."""
+    return results_root() / "cache"
+
+
+def save_counter_set(cset: CounterSet, path: Union[str, Path]) -> None:
+    """Serialize one ``CounterSet`` to an ``.npz`` (atomic via tmp+rename)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            np.savez_compressed(
+                fh,
+                version=np.int64(CACHE_VERSION),
+                label=np.str_(cset.label),
+                source=np.str_(cset.source),
+                num_cores=np.int64(cset.num_cores),
+                O=cset.O, N_f=cset.N_f, N_c=cset.N_c, N_p=cset.N_p,
+                lanes_active=np.float64(cset.lanes_active),
+                num_waves=np.int64(cset.num_waves),
+                waves_per_tile=np.int64(cset.waves_per_tile),
+                pipeline_depth=np.int64(cset.pipeline_depth),
+                bytes_read=np.float64(cset.bytes_read),
+                flops=np.float64(cset.flops),
+                ici_bytes=np.float64(cset.ici_bytes),
+                overhead_cycles=np.float64(cset.overhead_cycles),
+                has_wall_time=np.bool_(cset.wall_time_s is not None),
+                wall_time_s=np.float64(cset.wall_time_s
+                                       if cset.wall_time_s is not None
+                                       else 0.0),
+                meta=np.str_(json.dumps(cset.meta, default=str)),
+            )
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def load_counter_set(path: Union[str, Path]) -> CounterSet:
+    """Inverse of ``save_counter_set`` (raises on any malformed entry)."""
+    z = np.load(path)
+    if int(z["version"]) != CACHE_VERSION:
+        raise ValueError(f"cache entry version {int(z['version'])} != "
+                         f"{CACHE_VERSION}")
+    return CounterSet(
+        label=str(z["label"]),
+        source=str(z["source"]),
+        num_cores=int(z["num_cores"]),
+        O=z["O"], N_f=z["N_f"], N_c=z["N_c"], N_p=z["N_p"],
+        lanes_active=float(z["lanes_active"]),
+        num_waves=int(z["num_waves"]),
+        waves_per_tile=int(z["waves_per_tile"]),
+        pipeline_depth=int(z["pipeline_depth"]),
+        bytes_read=float(z["bytes_read"]),
+        flops=float(z["flops"]),
+        ici_bytes=float(z["ici_bytes"]),
+        overhead_cycles=float(z["overhead_cycles"]),
+        wall_time_s=float(z["wall_time_s"]) if bool(z["has_wall_time"])
+        else None,
+        meta=json.loads(str(z["meta"])),
+    )
+
+
+class SweepCache:
+    """One-file-per-point on-disk counter cache (see module docstring)."""
+
+    def __init__(self, root: Optional[Union[str, Path]] = None) -> None:
+        self.root = Path(root) if root is not None else default_cache_root()
+
+    def key(self, provider_name: str, fingerprint: str,
+            table_key: str) -> str:
+        payload = (f"v{CACHE_VERSION}|{_collection_code_digest()}|"
+                   f"{provider_name}|{fingerprint}|{table_key}")
+        return hashlib.sha256(payload.encode()).hexdigest()[:32]
+
+    def path(self, key: str) -> Path:
+        return self.root / f"{key}.npz"
+
+    def get(self, key: str) -> Optional[CounterSet]:
+        """Cached CounterSet, or ``None`` (missing or unreadable = miss)."""
+        path = self.path(key)
+        if not path.exists():
+            return None
+        try:
+            return load_counter_set(path)
+        except Exception:
+            return None
+
+    def put(self, key: str, cset: CounterSet) -> None:
+        save_counter_set(cset, self.path(key))
+
+    def clear(self) -> int:
+        """Delete every cache entry; returns how many were removed."""
+        n = 0
+        if self.root.exists():
+            for f in self.root.glob("*.npz"):
+                f.unlink()
+                n += 1
+        return n
+
+    def __len__(self) -> int:
+        return len(list(self.root.glob("*.npz"))) if self.root.exists() else 0

@@ -11,7 +11,10 @@ Five subcommands over the ``repro.analysis`` Session API:
 Every command prints its report to stdout (``--format text|json|csv``;
 ``devices`` and ``validate`` render ``text|json`` only) and can persist
 it with ``--output PATH``; ``sweep`` and ``compare`` additionally drop
-an artifact under ``results/cli/`` unless told not to.
+an artifact under ``results/cli/`` unless told not to, and cache the
+collected counters under ``results/cache/`` (``--no-cache`` opts out)
+so a repeated sweep skips collection and goes straight to the columnar
+batch model evaluation.
 The CLI builds ordinary ``WorkloadSpec``s and calls the same Session
 methods the Python API exposes, so its numbers are bit-identical to a
 scripted run.
@@ -21,7 +24,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 from pathlib import Path
 from typing import Optional, Sequence
@@ -34,11 +36,14 @@ DEFAULT_JOBS = 8   # sweep-parallelism knob (thread pool over providers)
 
 
 def results_dir() -> Path:
-    """``results/`` at the repo root (``REPRO_RESULTS`` overrides)."""
-    env = os.environ.get("REPRO_RESULTS")
-    if env:
-        return Path(env)
-    return Path(__file__).resolve().parents[3] / "results"
+    """``results/`` at the repo root (``REPRO_RESULTS`` overrides).
+
+    Delegates to the one shared resolution rule in
+    ``repro.analysis.sweep_cache`` so CLI artifacts and the persistent
+    counter cache can never disagree about where results live.
+    """
+    from repro.analysis.sweep_cache import results_root
+    return results_root()
 
 
 def _emit(report: str, args, default_artifact: Optional[str] = None) -> None:
@@ -63,6 +68,21 @@ def _session(args) -> Session:
     return Session(args.device, provider=args.provider,
                    cache_dir=args.cache_dir,
                    shift_tol=getattr(args, "shift_tol", bottleneck.SHIFT_TOL))
+
+
+def _sweep_cache(args):
+    """Sweep commands cache collected counters under results/cache/.
+
+    A re-run of the same sweep (same provider + content fingerprints +
+    device calibration) then skips counter collection entirely and goes
+    straight to the batch model evaluation.  ``--no-cache`` opts out;
+    the cache root follows ``results_dir()`` (so ``REPRO_RESULTS``
+    relocates it, and ``rm -rf results/cache`` clears it).
+    """
+    if getattr(args, "no_cache", False):
+        return False
+    from repro.analysis import SweepCache
+    return SweepCache()   # default root: results_dir() / "cache"
 
 
 # -- subcommands -------------------------------------------------------------
@@ -107,7 +127,8 @@ def cmd_sweep(args) -> int:
     results = {}
     for dev in devices:
         sess = Session(dev, provider=args.provider,
-                       cache_dir=args.cache_dir, shift_tol=args.shift_tol)
+                       cache_dir=args.cache_dir, shift_tol=args.shift_tol,
+                       persistent_cache=_sweep_cache(args))
         results[sess.device.name] = sess.sweep(specs, parallel=jobs)
     tag = "-".join(results)
     ext = {"text": "txt", "json": "json", "csv": "csv"}[args.format]
@@ -180,7 +201,8 @@ def cmd_compare(args) -> int:
         llc_bytes=args.llc_bytes, miss_latency_cycles=args.miss_latency,
         hide_concurrency=args.hide_concurrency))
     sess = Session(device, provider=args.provider,
-                   cache_dir=args.cache_dir, shift_tol=args.shift_tol)
+                   cache_dir=args.cache_dir, shift_tol=args.shift_tol,
+                   persistent_cache=_sweep_cache(args))
 
     def spec(kind, px, variant):
         img = wl.make_image(kind, px, seed=args.seed)
@@ -351,6 +373,9 @@ def build_parser() -> argparse.ArgumentParser:
                         "bottleneck shift (default %(default)s)")
     p.add_argument("--no-artifact", action="store_true",
                    help="do not write the default results/cli/ artifact")
+    p.add_argument("--no-cache", action="store_true",
+                   help="do not read/write the results/cache/ counter "
+                        "cache (re-collect every point)")
     p.set_defaults(func=cmd_sweep)
 
     p = sub.add_parser(
@@ -386,6 +411,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--jobs", type=int, default=None,
                    help="concurrent collection threads per sweep")
     p.add_argument("--no-artifact", action="store_true")
+    p.add_argument("--no-cache", action="store_true",
+                   help="do not read/write the results/cache/ counter "
+                        "cache (re-collect every point)")
     p.set_defaults(func=cmd_compare)
 
     return ap

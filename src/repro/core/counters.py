@@ -346,6 +346,173 @@ class CounterSet:
         ]
 
 
+# ---------------------------------------------------------------------------
+# CounterFrame: a columnar (struct-of-arrays) stack of CounterSets
+# ---------------------------------------------------------------------------
+
+
+def _occupancy_batch(num_waves: np.ndarray, waves_per_tile: np.ndarray,
+                     pipeline_depth: np.ndarray, n_max: int) -> np.ndarray:
+    """Vectorized ``geometry_occupancy`` (identical min-chain, per point)."""
+    inflight = np.minimum(np.minimum(waves_per_tile * pipeline_depth, n_max),
+                          np.maximum(num_waves, 1))
+    return inflight / float(n_max)
+
+
+def _true_n_batch(num_waves: np.ndarray, waves_per_tile: np.ndarray,
+                  pipeline_depth: np.ndarray, n_max: int) -> np.ndarray:
+    """Vectorized ``geometry_true_n`` (same sawtooth algebra, per point)."""
+    burst = np.minimum(waves_per_tile * pipeline_depth, n_max)
+    safe_burst = np.maximum(burst, 1)
+    full_bursts = num_waves // safe_burst
+    tail = num_waves - full_bursts * burst
+    avg_full = (burst + 1) / 2.0
+    avg_tail = np.where(tail > 0, (tail + 1) / 2.0, 0.0)
+    w_full = full_bursts * burst
+    denom = w_full + tail
+    num = avg_full * w_full + avg_tail * tail
+    return np.where(denom > 0, num / np.where(denom > 0, denom, 1), 0.0)
+
+
+def _sequential_row_sum(arr: np.ndarray) -> np.ndarray:
+    """Left-to-right row sums of a (P, C) array.
+
+    Matches the accumulation order of a Python ``sum`` over per-core
+    scalars (the scalar model path), which numpy's pairwise ``np.sum``
+    does not guarantee — keeping the batch profiler bit-identical to the
+    per-point reference.  C is the core count (<= a few dozen), so the
+    Python loop is over columns only.
+    """
+    out = np.zeros(arr.shape[0], np.float64)
+    for col in range(arr.shape[1]):
+        out = out + arr[:, col]
+    return out
+
+
+@dataclasses.dataclass
+class CounterFrame:
+    """Struct-of-arrays stack of ``CounterSet``s: shape = points x cores.
+
+    The batch-profiling engine's input: where a ``CounterSet`` holds one
+    launch's per-core counters, a ``CounterFrame`` holds a whole sweep's
+    as (P, C) columns, so the §3 queueing model evaluates in whole-array
+    numpy ops (``profiler.profile_batch``) instead of a per-point Python
+    loop.  The stack is rectangular — every row must share ``num_cores``
+    (``Session`` groups heterogeneous sweeps before framing).
+    """
+
+    labels: list                    # (P,) point labels
+    sources: list                   # (P,) provider names
+    num_cores: int                  # C, uniform across rows
+    O: np.ndarray                   # (P, C) serialization transactions
+    N_f: np.ndarray                 # (P, C) FAO-class wave jobs
+    N_c: np.ndarray                 # (P, C) CAS-class wave jobs
+    N_p: np.ndarray                 # (P, C) POPC-class wave jobs
+    lanes_active: np.ndarray        # (P,) mean active lanes per wave
+    num_waves: np.ndarray           # (P,) launch geometry
+    waves_per_tile: np.ndarray      # (P,)
+    pipeline_depth: np.ndarray      # (P,)
+    bytes_read: np.ndarray          # (P,) roofline side
+    flops: np.ndarray               # (P,)
+    ici_bytes: np.ndarray           # (P,)
+    overhead_cycles: np.ndarray     # (P,)
+    wall_time_s: list               # (P,) Optional[float] per point
+    meta: list                      # (P,) per-point meta dicts
+
+    @classmethod
+    def from_sets(cls, csets: Sequence["CounterSet"]) -> "CounterFrame":
+        """Stack CounterSets column-wise; rejects ragged core counts."""
+        csets = list(csets)
+        if not csets:
+            raise ValueError("CounterFrame needs at least one CounterSet")
+        cores = {cs.num_cores for cs in csets}
+        if len(cores) != 1:
+            raise ValueError(
+                f"CounterFrame rows must share num_cores, got {sorted(cores)}"
+                f" — group the sweep by core count first")
+        return cls(
+            labels=[cs.label for cs in csets],
+            sources=[cs.source for cs in csets],
+            num_cores=csets[0].num_cores,
+            O=np.stack([cs.O for cs in csets]),
+            N_f=np.stack([cs.N_f for cs in csets]),
+            N_c=np.stack([cs.N_c for cs in csets]),
+            N_p=np.stack([cs.N_p for cs in csets]),
+            lanes_active=np.array([cs.lanes_active for cs in csets]),
+            num_waves=np.array([cs.num_waves for cs in csets], np.int64),
+            waves_per_tile=np.array([cs.waves_per_tile for cs in csets],
+                                    np.int64),
+            pipeline_depth=np.array([cs.pipeline_depth for cs in csets],
+                                    np.int64),
+            bytes_read=np.array([cs.bytes_read for cs in csets], np.float64),
+            flops=np.array([cs.flops for cs in csets], np.float64),
+            ici_bytes=np.array([cs.ici_bytes for cs in csets], np.float64),
+            overhead_cycles=np.array([cs.overhead_cycles for cs in csets],
+                                     np.float64),
+            wall_time_s=[cs.wall_time_s for cs in csets],
+            meta=[cs.meta for cs in csets],
+        )
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+    @property
+    def num_points(self) -> int:
+        return len(self.labels)
+
+    def row(self, i: int) -> "CounterSet":
+        """Reconstruct row ``i`` as a standalone ``CounterSet``."""
+        return CounterSet(
+            label=self.labels[i], source=self.sources[i],
+            num_cores=self.num_cores,
+            O=self.O[i].copy(), N_f=self.N_f[i].copy(),
+            N_c=self.N_c[i].copy(), N_p=self.N_p[i].copy(),
+            lanes_active=float(self.lanes_active[i]),
+            num_waves=int(self.num_waves[i]),
+            waves_per_tile=int(self.waves_per_tile[i]),
+            pipeline_depth=int(self.pipeline_depth[i]),
+            bytes_read=float(self.bytes_read[i]),
+            flops=float(self.flops[i]),
+            ici_bytes=float(self.ici_bytes[i]),
+            overhead_cycles=float(self.overhead_cycles[i]),
+            wall_time_s=self.wall_time_s[i],
+            meta=dict(self.meta[i]),
+        )
+
+    # -- derived columns (vectorized paper-Table-2 inputs) -----------------
+
+    @property
+    def N(self) -> np.ndarray:
+        """Total wave jobs per (point, core) — (N_f + N_c) + N_p, the
+        scalar path's addition order."""
+        return (self.N_f + self.N_c) + self.N_p
+
+    @property
+    def total_jobs(self) -> np.ndarray:
+        """(P,) total jobs per point (sequential core sum, see above)."""
+        return _sequential_row_sum(self.N)
+
+    @property
+    def total_O(self) -> np.ndarray:
+        """(P,) total transactions per point (sequential core sum)."""
+        return _sequential_row_sum(self.O)
+
+    @property
+    def e(self) -> np.ndarray:
+        """(P,) global serialization degree e = O / N (1.0 where idle)."""
+        jobs = self.total_jobs
+        return np.where(jobs > 0, self.total_O / np.where(jobs > 0, jobs, 1.0),
+                        1.0)
+
+    def occupancy(self, n_max: int) -> np.ndarray:
+        return _occupancy_batch(self.num_waves, self.waves_per_tile,
+                                self.pipeline_depth, n_max)
+
+    def true_n(self, n_max: int) -> np.ndarray:
+        return _true_n_batch(self.num_waves, self.waves_per_tile,
+                             self.pipeline_depth, n_max)
+
+
 def collect_basic_counters(
     trace: WaveTrace,
     *,

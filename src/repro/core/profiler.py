@@ -135,6 +135,9 @@ def profile_counters(
         cache = CacheModel()
     num_cores = cset.num_cores
     # Phase 1: scatter busy time per core (empty-counter sources skip it).
+    # B = N * S depends only on the counters, never on the window T, so
+    # this single model pass serves phase 3 too — the placeholder window
+    # (ones) only touches the U column, which phase 3 overwrites.
     if cset.total_jobs > 0:
         basic = cset.to_basic_counters(np.ones(num_cores), params.n_max)
         prelim = qmodel.derive_core_utilization(
@@ -142,6 +145,7 @@ def profile_counters(
         scatter_busy = np.array([c.B_cycles for c in prelim])
         n_hat = prelim[0].n_hat if prelim else 1.0
     else:
+        prelim = []
         scatter_busy = np.zeros(num_cores)
         n_hat = 1.0
 
@@ -167,13 +171,16 @@ def profile_counters(
         scatter_busy,
         np.maximum(mem_eff, np.maximum(compute_cycles, ici_cycles)))
 
-    # Phase 3: utilization against the modeled window.
-    if cset.total_jobs > 0:
-        basic = cset.to_basic_counters(T, params.n_max)
-        per_core = qmodel.derive_core_utilization(
-            basic, table, n_max=params.n_max, use_true_n=use_true_n)
-    else:
-        per_core = []
+    # Phase 3: utilization against the modeled window.  B and S are
+    # T-independent, so reuse phase 1's rows verbatim (no second
+    # derive_core_utilization pass, no re-interpolation) and only swap in
+    # the modeled window and the resulting U = B / T.
+    per_core = [
+        dataclasses.replace(
+            row, T_cycles=float(T[i]),
+            U=row.B_cycles / float(T[i]) if T[i] > 0 else 0.0)
+        for i, row in enumerate(prelim)
+    ]
 
     window = float(np.max(T))
     # One fixed unit set for every source: sweeps stack unit names across
@@ -194,6 +201,121 @@ def profile_counters(
                 "use_true_n": use_true_n, "source": cset.source,
                 "wall_time_s": cset.wall_time_s},
     )
+
+
+def profile_batch(
+    frame: counters_mod.CounterFrame,
+    table: qmodel.ServiceTimeTable,
+    *,
+    params: Optional[timing.ScatterUnitParams] = None,
+    chip: Optional[timing.ChipParams] = None,
+    cache: Optional[CacheModel] = None,
+    use_true_n: bool = False,
+) -> list[WorkloadProfile]:
+    """Profile a whole ``CounterFrame`` in one columnar model pass.
+
+    Point-for-point equivalent to calling ``profile_counters`` on each
+    row (same U, n-hat, e, busy times, windows, unit set — verified by
+    the batch-equivalence test suite), but the entire §3 pipeline —
+    occupancy geometry, the global e, c per core, ``S(n, e, c)`` via the
+    precompiled ``TableInterpolator``, busy time B, the kernel-time
+    window T, the four companion units — runs as whole-(P, C)-array
+    numpy ops.  A sweep's thousands of service-time lookups collapse
+    into one fused gather instead of thousands of Python ``trilinear``
+    calls; only the final (cheap) ``WorkloadProfile`` assembly loops.
+
+    Bottleneck argmax and the shift-hysteresis tolerance live on the
+    returned ``WorkloadProfile``/``bottleneck.detect_shifts`` exactly as
+    for the scalar path, so verdicts and shift events are identical by
+    construction once the arrays match.
+    """
+    if params is None:
+        params = timing.V5E_SCATTER
+    if chip is None:
+        chip = timing.V5E
+    if cache is None:
+        cache = CacheModel()
+    P, C = frame.num_points, frame.num_cores
+    if P == 0:
+        return []
+    n_max = params.n_max
+
+    # -- phase 1: scatter busy time, all points x cores at once ----------
+    total_jobs = frame.total_jobs                       # (P,)
+    has_jobs = total_jobs > 0
+    e_global = frame.e                                  # (P,)
+    n_hat_pt = (frame.true_n(n_max) if use_true_n
+                else frame.occupancy(n_max) * n_max)    # (P,)
+    n_hat_b = np.broadcast_to(n_hat_pt[:, None], (P, C))
+    e_b = np.broadcast_to(e_global[:, None], (P, C))
+    n_faocas = frame.N_f + frame.N_c                    # (P, C)
+    has_fc = n_faocas > 0
+    c_avg = np.where(
+        has_fc, n_hat_b * (frame.N_c / np.where(has_fc, n_faocas, 1.0)), 0.0)
+    S = np.where(has_fc, table.service_time_batch(n_hat_b, e_b, c_avg), 0.0)
+    busy = n_faocas * S
+    if table.popc_T is not None and np.any(frame.N_p > 0):
+        S_p = table.popc_service_time_batch(n_hat_b, e_b)
+        busy = busy + np.where(frame.N_p > 0, frame.N_p * S_p, 0.0)
+    scatter_busy = np.where(has_jobs[:, None], busy, 0.0)
+
+    # -- phase 2: companion units and the kernel-time window -------------
+    num_cores_f = float(C)
+    bytes_per_cycle = chip.hbm_bw / chip.clock_hz
+    mem_ideal = (frame.bytes_read / num_cores_f) / bytes_per_cycle  # (P,)
+    exp_cond = has_jobs & (frame.bytes_read > cache.llc_bytes)
+    hide = np.minimum(1.0, n_hat_pt / cache.hide_concurrency)
+    tiles = np.maximum(1.0,
+                       frame.num_waves / np.maximum(frame.waves_per_tile, 1))
+    exposure = np.where(
+        exp_cond,
+        (tiles / num_cores_f) * cache.miss_latency_cycles * (1.0 - hide),
+        0.0)
+    mem_eff = mem_ideal + exposure
+    compute_cycles = (frame.flops / num_cores_f) / (chip.peak_bf16_flops
+                                                    / chip.clock_hz)
+    ici_cycles = frame.ici_bytes / (chip.ici_bw_per_link / chip.clock_hz)
+    T = frame.overhead_cycles[:, None] + np.maximum(
+        scatter_busy,
+        np.maximum(mem_eff[:, None],
+                   np.maximum(compute_cycles[:, None], ici_cycles[:, None])))
+
+    # -- phase 3: utilization + per-point assembly -----------------------
+    U = np.where(T > 0, scatter_busy / np.where(T > 0, T, 1.0), 0.0)
+    scatter_mean = np.mean(scatter_busy, axis=1)        # (P,)
+    window = np.max(T, axis=1)                          # (P,)
+    N_pc = frame.N
+    profiles = []
+    for i in range(P):
+        if has_jobs[i]:
+            per_core = [
+                qmodel.CoreUtilization(
+                    core_id=core, N=float(N_pc[i, core]),
+                    n_hat=float(n_hat_pt[i]), e=float(e_global[i]),
+                    c=float(c_avg[i, core]), S_cycles=float(S[i, core]),
+                    B_cycles=float(scatter_busy[i, core]),
+                    T_cycles=float(T[i, core]), U=float(U[i, core]))
+                for core in range(C)
+            ]
+        else:
+            per_core = []
+        w = float(window[i])
+        units = [
+            UnitUtilization("scatter", float(scatter_mean[i]), w),
+            UnitUtilization("hbm", float(mem_eff[i]), w),
+            UnitUtilization("mxu", float(compute_cycles[i]), w),
+            UnitUtilization("ici", float(ici_cycles[i]), w),
+        ]
+        profiles.append(WorkloadProfile(
+            label=frame.labels[i], per_core=per_core, units=units,
+            T_cycles=T[i].copy(),
+            params={"bytes_read": float(frame.bytes_read[i]),
+                    "flops": float(frame.flops[i]),
+                    "overhead_cycles": float(frame.overhead_cycles[i]),
+                    "use_true_n": use_true_n, "source": frame.sources[i],
+                    "wall_time_s": frame.wall_time_s[i]},
+        ))
+    return profiles
 
 
 def profile_scatter_workload(

@@ -81,6 +81,78 @@ def trilinear(
     return out
 
 
+class TableInterpolator:
+    """Precompiled multilinear interpolation on a regular grid.
+
+    ``trilinear`` re-derives everything per call; this factors the lookup
+    into (1) per-axis clamp/searchsorted weights and (2) ONE flat gather
+    over all ``2^ndim`` corner values, everything vectorized over the
+    query batch.  Numerically it is *bit-identical* to ``trilinear`` —
+    same clamping, same corner enumeration order, same weight-product
+    order, same accumulation order — but a sweep's thousands of
+    ``S(n, e, c)`` lookups become a single fused numpy pass instead of
+    thousands of Python calls (see ``profiler.profile_batch``).
+    """
+
+    def __init__(self, values: Array, grids: Sequence[Array]) -> None:
+        self.values = np.ascontiguousarray(values, np.float64)
+        self.grids = [np.ascontiguousarray(g, np.float64) for g in grids]
+        if len(self.grids) != self.values.ndim:
+            raise ValueError(
+                f"need one grid per value axis: {len(self.grids)} grids "
+                f"for a {self.values.ndim}-d table")
+        for g, size in zip(self.grids, self.values.shape):
+            if len(g) != size:
+                raise ValueError(
+                    f"grid length {len(g)} does not match axis size {size}")
+        self._flat = self.values.reshape(-1)
+        # element strides of the (C-contiguous) value array, per axis
+        self._strides = [
+            int(np.prod(self.values.shape[d + 1:], dtype=np.int64))
+            for d in range(self.values.ndim)
+        ]
+
+    def __call__(self, *query) -> Array:
+        """Interpolate at ``query`` (one array per axis, broadcastable)."""
+        if len(query) != len(self.grids):
+            raise ValueError(f"expected {len(self.grids)} query arrays, "
+                             f"got {len(query)}")
+        qs = [np.asarray(q, np.float64) for q in query]
+        if len(qs) > 1:
+            qs = list(np.broadcast_arrays(*qs))
+        los, his, ws = [], [], []
+        for g, q in zip(self.grids, qs):
+            lo, hi, w = _interp_axis_weights(g, q)
+            # a single-point axis yields hi == 0, lo == -1: trilinear's
+            # tuple indexing wraps -1 to that same single element, but a
+            # *flat* index must not go negative — clamp to the identical
+            # element explicitly (w == 0 there, so the value is unchanged)
+            los.append(np.maximum(lo, 0))
+            his.append(hi)
+            ws.append(w)
+        ndim = len(self.grids)
+        shape = np.shape(qs[0])
+        ncorners = 1 << ndim
+        idx = np.empty((ncorners,) + shape, np.intp)
+        for corner in range(ncorners):
+            flat = np.zeros(shape, np.intp)
+            for d in range(ndim):
+                pick = his[d] if corner >> d & 1 else los[d]
+                flat += pick * self._strides[d]
+            idx[corner] = flat
+        vals = self._flat.take(idx)          # one gather for all corners
+        out = 0.0
+        for corner in range(ncorners):
+            weight = 1.0
+            for d in range(ndim):
+                if corner >> d & 1:
+                    weight = weight * ws[d]
+                else:
+                    weight = weight * (1.0 - ws[d])
+            out = out + weight * vals[corner]
+        return out
+
+
 # ---------------------------------------------------------------------------
 # Service-time table (paper §3.2, Fig. 1)
 # ---------------------------------------------------------------------------
@@ -148,10 +220,60 @@ class ServiceTimeTable:
     def service_seconds(self, n, e, c) -> Array:
         return self.service_time(n, e, c) / self.clock_hz
 
+    # -- precompiled batch lookups ----------------------------------------
+
+    def interpolator(self) -> TableInterpolator:
+        """Precompiled ``T(n, e, cfrac)`` interpolator, built once per table.
+
+        The table is immutable in practice (built by Tool 1, then only
+        read), so the compiled axis data is cached on first use.
+        """
+        interp = getattr(self, "_interp", None)
+        if interp is None:
+            interp = TableInterpolator(
+                self.T, (self.n_grid, self.e_grid, self.cfrac_grid))
+            self._interp = interp
+        return interp
+
+    def popc_interpolator(self) -> TableInterpolator:
+        """Precompiled ``T_popc(n, e)`` interpolator (2-D companion table)."""
+        if self.popc_T is None:
+            raise ValueError("table has no POPC-class samples")
+        interp = getattr(self, "_popc_interp", None)
+        if interp is None:
+            interp = TableInterpolator(self.popc_T,
+                                       (self.n_grid, self.e_grid))
+            self._popc_interp = interp
+        return interp
+
+    def service_time_batch(self, n, e, c) -> Array:
+        """Vectorized ``service_time`` over whole query arrays.
+
+        Bit-identical to calling ``service_time`` elementwise (same cfrac
+        rectangularization, same clamping, same corner arithmetic via
+        ``TableInterpolator``), but one fused pass — the batch profiler's
+        hot lookup.
+        """
+        n = np.asarray(n, np.float64)
+        e = np.asarray(e, np.float64)
+        c = np.asarray(c, np.float64)
+        cfrac = np.where(n > 0, c / np.where(n > 0, n, 1.0), 0.0)
+        t = self.interpolator()(n, e, cfrac)
+        return np.where(n > 0, t / np.where(n > 0, n, 1.0), 0.0)
+
+    def popc_service_time_batch(self, n, e) -> Array:
+        """Vectorized ``popc_service_time`` (see ``service_time_batch``)."""
+        n = np.asarray(n, np.float64)
+        t = self.popc_interpolator()(n, np.asarray(e, np.float64))
+        return np.where(n > 0, t / np.where(n > 0, n, 1.0), 0.0)
+
     # -- (de)serialization -------------------------------------------------
 
     def save(self, path: str) -> None:
-        np.savez(
+        # compressed since PR 4 (the grid is highly regular, ~6x smaller);
+        # ``load`` reads both this and the uncompressed .npz artifacts
+        # written by earlier revisions (np.load is format-agnostic)
+        np.savez_compressed(
             path,
             n_grid=self.n_grid,
             e_grid=self.e_grid,

@@ -203,6 +203,40 @@ def test_sweep_user_label_stays_unique_per_size(capsys):
     assert json.loads(out)["points"][0]["label"] == "foo"
 
 
+def test_sweep_warm_cache_skips_collection(capsys, tmp_path, monkeypatch):
+    """Acceptance: a repeated CLI sweep does zero counter collection.
+
+    Each ``main()`` call builds a fresh Session (empty in-process memo),
+    so the second run exercises the persistent results/cache/ path the
+    way a new process would.
+    """
+    from repro.analysis.providers.trace import TraceProvider
+
+    calls = []
+    orig = TraceProvider.collect
+
+    def counting(self, spec, device):
+        calls.append(spec.label)
+        return orig(self, spec, device)
+
+    monkeypatch.setattr(TraceProvider, "collect", counting)
+    argv = ["sweep", "--size", "2^13", "--waves-per-tile", "4", "8",
+            "--format", "csv", "--no-artifact"]
+    rc, out1 = run_cli(argv, capsys)
+    assert rc == 0
+    assert len(calls) == 2
+    assert (tmp_path / "results" / "cache").exists()   # REPRO_RESULTS root
+    rc, out2 = run_cli(argv, capsys)
+    assert rc == 0
+    assert len(calls) == 2                  # warm re-sweep: zero collection
+    assert out2 == out1                     # and a bit-identical report
+    # --no-cache opts out: the same sweep collects again
+    rc, out3 = run_cli(argv + ["--no-cache"], capsys)
+    assert rc == 0
+    assert len(calls) == 4
+    assert out3 == out1
+
+
 def test_sweep_default_artifact_under_results(capsys, tmp_path):
     rc, _ = run_cli(["sweep", "--size", "2^12", "--format", "csv"], capsys)
     assert rc == 0

@@ -1,0 +1,165 @@
+"""TableInterpolator vs trilinear: agreement, boundaries, edge grids.
+
+The batch profiler's hot lookup (``qmodel.TableInterpolator``) must be a
+drop-in for ``qmodel.trilinear`` — same clamping, same corner weights —
+or the batch/scalar equivalence guarantee of ``profile_batch`` breaks.
+These tests pin that contract on random queries, boundary clamping,
+degenerate single-point axes, and the paper's ``T(0, ., .) = 0``
+boundary (Eq. 1).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import microbench, qmodel
+
+TABLE = microbench.build_table()
+GRIDS3 = (TABLE.n_grid, TABLE.e_grid, TABLE.cfrac_grid)
+
+
+def _rand_queries(n, lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, n)
+
+
+# -- agreement with trilinear -------------------------------------------------
+
+
+def test_interpolator_matches_trilinear_random_3d():
+    n = _rand_queries(4096, -8.0, 80.0, 0)       # deliberately out of range
+    e = _rand_queries(4096, 0.0, 40.0, 1)
+    cf = _rand_queries(4096, -0.3, 1.4, 2)
+    ref = qmodel.trilinear(TABLE.T, GRIDS3, (n, e, cf))
+    got = TABLE.interpolator()(n, e, cf)
+    np.testing.assert_array_equal(got, ref)      # bit-identical, not approx
+
+
+def test_interpolator_matches_trilinear_random_2d_popc():
+    n = _rand_queries(2048, 0.0, 70.0, 3)
+    e = _rand_queries(2048, 1.0, 35.0, 4)
+    ref = qmodel.trilinear(TABLE.popc_T, (TABLE.n_grid, TABLE.e_grid), (n, e))
+    got = TABLE.popc_interpolator()(n, e)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_interpolator_scalar_query_matches():
+    for q in [(1.0, 1.0, 0.0), (13.7, 7.3, 0.42), (64.0, 32.0, 1.0)]:
+        ref = float(qmodel.trilinear(TABLE.T, GRIDS3, q))
+        got = float(TABLE.interpolator()(*q))
+        assert got == ref
+
+
+def test_service_time_batch_matches_scalar_loop():
+    n = _rand_queries(512, 0.0, 70.0, 5)
+    e = _rand_queries(512, 1.0, 35.0, 6)
+    c = _rand_queries(512, 0.0, 1.0, 7) * n
+    batch = TABLE.service_time_batch(n, e, c)
+    loop = np.array([float(TABLE.service_time(ni, ei, ci))
+                     for ni, ei, ci in zip(n, e, c)])
+    np.testing.assert_array_equal(batch, loop)
+
+
+def test_popc_service_time_batch_matches_scalar_loop():
+    n = _rand_queries(256, 0.0, 70.0, 8)
+    e = _rand_queries(256, 1.0, 35.0, 9)
+    batch = TABLE.popc_service_time_batch(n, e)
+    loop = np.array([float(TABLE.popc_service_time(ni, ei))
+                     for ni, ei in zip(n, e)])
+    np.testing.assert_array_equal(batch, loop)
+
+
+def test_interpolators_are_cached_per_table():
+    assert TABLE.interpolator() is TABLE.interpolator()
+    assert TABLE.popc_interpolator() is TABLE.popc_interpolator()
+
+
+def test_popc_interpolator_requires_popc_table():
+    bare = qmodel.ServiceTimeTable(
+        n_grid=TABLE.n_grid, e_grid=TABLE.e_grid,
+        cfrac_grid=TABLE.cfrac_grid, T=TABLE.T, popc_T=None)
+    with pytest.raises(ValueError, match="POPC"):
+        bare.popc_interpolator()
+
+
+# -- boundary clamping --------------------------------------------------------
+
+
+def test_clamp_beyond_n_grid_end():
+    """n > n_grid[-1] clamps to the table edge (saturated load)."""
+    edge = float(TABLE.interpolator()(TABLE.n_grid[-1], 8.0, 0.5))
+    beyond = float(TABLE.interpolator()(TABLE.n_grid[-1] + 50.0, 8.0, 0.5))
+    assert beyond == edge
+    # and matches trilinear's clamp bit for bit
+    ref = float(qmodel.trilinear(
+        TABLE.T, GRIDS3, (TABLE.n_grid[-1] + 50.0, 8.0, 0.5)))
+    assert beyond == ref
+
+
+def test_clamp_cfrac_at_0_and_1_and_beyond():
+    it = TABLE.interpolator()
+    at0 = float(it(16.0, 4.0, 0.0))
+    below = float(it(16.0, 4.0, -0.7))
+    assert below == at0
+    at1 = float(it(16.0, 4.0, 1.0))
+    above = float(it(16.0, 4.0, 1.7))
+    assert above == at1
+    # interior lattice values are hit exactly at the clamped edges
+    np.testing.assert_allclose(at0, TABLE.T[16, 3, 0], rtol=1e-12)
+    np.testing.assert_allclose(at1, TABLE.T[16, 3, -1], rtol=1e-12)
+
+
+def test_clamp_e_below_and_above_grid():
+    it = TABLE.interpolator()
+    assert float(it(8.0, 0.0, 0.0)) == float(it(8.0, TABLE.e_grid[0], 0.0))
+    assert float(it(8.0, 99.0, 0.0)) == float(it(8.0, TABLE.e_grid[-1], 0.0))
+
+
+def test_zero_load_boundary_is_zero():
+    """T(0, ., .) = 0 (paper Eq. 1) survives interpolation and S := 0."""
+    e = _rand_queries(64, 1.0, 32.0, 10)
+    cf = _rand_queries(64, 0.0, 1.0, 11)
+    t0 = TABLE.interpolator()(np.zeros(64), e, cf)
+    np.testing.assert_array_equal(t0, np.zeros(64))
+    s0 = TABLE.service_time_batch(np.zeros(64), e, np.zeros(64))
+    np.testing.assert_array_equal(s0, np.zeros(64))
+    # negative n clamps to the n = 0 plane too
+    assert float(TABLE.interpolator()(-3.0, 4.0, 0.5)) == 0.0
+
+
+# -- degenerate grids ---------------------------------------------------------
+
+
+def test_single_point_axis_matches_trilinear():
+    """A length-1 axis interpolates to its only sample, like trilinear."""
+    vals = np.array([[1.0, 2.0, 4.0]])          # axis 0 has one point
+    grids = (np.array([5.0]), np.array([0.0, 1.0, 2.0]))
+    it = qmodel.TableInterpolator(vals, grids)
+    q0 = np.array([3.0, 5.0, 9.0])              # below / at / above the point
+    q1 = np.array([0.5, 1.5, 5.0])
+    ref = qmodel.trilinear(vals, grids, (q0, q1))
+    got = it(q0, q1)
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_allclose(got, [1.5, 3.0, 4.0], rtol=1e-12)
+
+
+def test_all_single_point_axes():
+    it = qmodel.TableInterpolator(np.array([[7.5]]),
+                                  (np.array([2.0]), np.array([3.0])))
+    assert float(it(0.0, 100.0)) == 7.5
+
+
+def test_interpolator_rejects_mismatched_grids():
+    with pytest.raises(ValueError, match="one grid per value axis"):
+        qmodel.TableInterpolator(TABLE.T, (TABLE.n_grid, TABLE.e_grid))
+    with pytest.raises(ValueError, match="does not match axis size"):
+        qmodel.TableInterpolator(
+            TABLE.T, (TABLE.n_grid, TABLE.e_grid, TABLE.e_grid))
+    with pytest.raises(ValueError, match="query arrays"):
+        TABLE.interpolator()(1.0, 2.0)
+
+
+def test_exact_on_lattice_points_via_interpolator():
+    it = TABLE.interpolator()
+    for i, j, k in [(0, 0, 0), (16, 7, 8), (64, 31, 16), (33, 15, 3)]:
+        got = float(it(TABLE.n_grid[i], TABLE.e_grid[j], TABLE.cfrac_grid[k]))
+        np.testing.assert_allclose(got, TABLE.T[i, j, k], rtol=1e-12)

@@ -52,6 +52,44 @@ def test_save_load_without_popc(tmp_path):
         back.popc_service_time(4, 2)
 
 
+def test_save_is_compressed_and_loads_legacy_uncompressed(tmp_path):
+    """``save`` writes compressed .npz; ``load`` reads both formats.
+
+    Existing uncompressed artifacts under results/tables/ (written before
+    the savez_compressed switch) must keep loading bit-for-bit.
+    """
+    import json
+    import zipfile
+
+    tab = microbench.build_table()
+    new_path = tmp_path / "compressed.npz"
+    tab.save(str(new_path))
+    with zipfile.ZipFile(new_path) as z:
+        assert all(i.compress_type == zipfile.ZIP_DEFLATED
+                   for i in z.infolist())
+
+    # a legacy artifact: the exact uncompressed layout save() used to emit
+    legacy_path = tmp_path / "legacy.npz"
+    np.savez(
+        str(legacy_path),
+        n_grid=tab.n_grid, e_grid=tab.e_grid, cfrac_grid=tab.cfrac_grid,
+        T=tab.T, popc_T=tab.popc_T, clock_hz=np.float64(tab.clock_hz),
+        meta=np.str_(json.dumps(tab.meta, default=float)))
+    with zipfile.ZipFile(legacy_path) as z:
+        assert all(i.compress_type == zipfile.ZIP_STORED
+                   for i in z.infolist())
+
+    for path in (new_path, legacy_path):
+        back = qmodel.ServiceTimeTable.load(str(path))
+        np.testing.assert_array_equal(back.T, tab.T)
+        np.testing.assert_array_equal(back.popc_T, tab.popc_T)
+        assert back.clock_hz == tab.clock_hz
+        np.testing.assert_allclose(back.service_time(13.5, 7.2, 3.3),
+                                   tab.service_time(13.5, 7.2, 3.3))
+    # compression must actually pay on the regular grid
+    assert new_path.stat().st_size < legacy_path.stat().st_size / 2
+
+
 def test_device_table_builds_then_loads_from_disk(tmp_path, monkeypatch):
     dev = get_device("v5e")
     calls = {"n": 0}
