@@ -16,6 +16,11 @@ Prints ``name,us_per_call,derived`` CSV rows (spec format):
                                 scalar loop on a 64-point grid, plus
                                 cold/warm persistent sweep-cache timings
                                 (CI perf canary via --min-batch-speedup)
+  * advise_search             — optimization advisor over a 32-candidate
+                                frontier: one batch evaluation per
+                                frontier, zero scalar profiling, warm
+                                cache re-advise collects nothing
+                                (CI gate via --advise-gate)
   * kernel_walltime           — interpret-mode Pallas kernel wall times
                                 (regression canary; not TPU numbers)
   * roofline_table            — per (arch x shape x mesh) terms from the
@@ -266,6 +271,96 @@ def profile_batch_vs_loop() -> None:
          f"warm_speedup={us_cold / max(us_warm, 1e-9):.1f}x")
 
 
+LAST_ADVISE: dict | None = None
+
+
+def advise_search() -> None:
+    """Advisor search over a 32-candidate frontier (PR 5).
+
+    The advisor's scoring contract: every enumerated candidate is
+    evaluated through ONE columnar ``CounterFrame``/``profile_batch``
+    pass per frontier — never per-candidate scalar profiling — and a
+    warm re-run against the persistent sweep cache collects nothing.
+    Both invariants are measured here (by wrapping the profiler entry
+    points and re-advising from a second session) and enforced in CI via
+    ``--advise-gate``.
+    """
+    import shutil
+    import tempfile
+
+    from repro.advisor import (CasToFao, LaneInterleave, Replicate,
+                               SetPipelineDepth, SetWavesPerTile)
+    from repro.core import profiler as prof_mod
+    from repro.core import timing
+
+    # catalog sized so a depth-1 frontier enumerates exactly 32 legal
+    # candidates on a CAS-class index stream at waves_per_tile=8
+    catalog = (
+        [SetWavesPerTile(w) for w in (1, 2, 3, 4, 5, 6, 7, 12, 16, 20, 24,
+                                      28, 32, 40, 48, 56, 64, 96, 128, 192,
+                                      256)]           # 21 (8 excluded)
+        + [SetPipelineDepth(d) for d in (1, 4, 8)]    # 3 (2 is current)
+        + [Replicate(f) for f in (2, 4, 8, 16, 32, 64)]   # 6
+        + [LaneInterleave(), CasToFao()]              # 2
+    )
+    # clustered runs (sorted stream): maximal within-group contention,
+    # and — unlike an all-equal stream — every catalog entry rewrites the
+    # content (an interleave of all-zeros would dedup against the base)
+    idx = np.repeat(np.arange(256, dtype=np.int64), (1 << 15) // 256)
+    spec = WorkloadSpec.from_indices(
+        idx, 256, label="clustered-32K-cas", job_class=timing.CAS,
+        waves_per_tile=8)
+
+    counts = {"batch": 0, "scalar": 0}
+    orig_batch = prof_mod.profile_batch
+    orig_scalar = prof_mod.profile_counters
+
+    def counting_batch(*a, **kw):
+        counts["batch"] += 1
+        return orig_batch(*a, **kw)
+
+    def counting_scalar(*a, **kw):
+        counts["scalar"] += 1
+        return orig_scalar(*a, **kw)
+
+    tmp = tempfile.mkdtemp(prefix="repro-bench-advise-")
+    prof_mod.profile_batch = counting_batch
+    prof_mod.profile_counters = counting_scalar
+    try:
+        cold_sess = Session(device="v5e", persistent_cache=tmp)
+        t0 = time.perf_counter()
+        report = cold_sess.advise(spec, catalog=catalog, depth=1,
+                                  beam_width=8, top_k=5)
+        us_cold = (time.perf_counter() - t0) * 1e6
+        warm_sess = Session(device="v5e", persistent_cache=tmp)
+        t0 = time.perf_counter()
+        warm_sess.advise(spec, catalog=catalog, depth=1, beam_width=8,
+                         top_k=5)
+        us_warm = (time.perf_counter() - t0) * 1e6
+    finally:
+        prof_mod.profile_batch = orig_batch
+        prof_mod.profile_counters = orig_scalar
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    top = report.best
+    global LAST_ADVISE
+    LAST_ADVISE = {
+        "candidates": report.stats["candidates"],
+        "frontiers": report.stats["frontiers"],
+        "batch_evals": counts["batch"] // 2,   # two identical advise runs
+        "scalar_evals": counts["scalar"],
+        "warm_collected": warm_sess.stats["collected"],
+    }
+    emit("advise_search_32cand", us_cold,
+         f"candidates={report.stats['candidates']};"
+         f"frontiers={report.stats['frontiers']};"
+         f"batch_evals_per_run={counts['batch'] // 2};"
+         f"scalar_evals={counts['scalar']};"
+         f"top={'+'.join(top.names)};speedup={top.speedup:.3f};"
+         f"cold_us={us_cold:.0f};warm_us={us_warm:.0f};"
+         f"warm_collected={warm_sess.stats['collected']}")
+
+
 def kernel_walltime() -> None:
     img = jnp.asarray(make_image("uniform", 1 << 16))
     us = _timeit(lambda: hist_ops.histogram(img).block_until_ready())
@@ -307,8 +402,8 @@ def roofline_table() -> None:
 
 ALL = [fig1_service_time_table, fig3_utilization_sweep, fig4_popc_vs_fao,
        fig5_reorder_speedup, sec5_model_vs_measured, moe_dispatch_profile,
-       sweep_grid_parallel, profile_batch_vs_loop, kernel_walltime,
-       roofline_table]
+       sweep_grid_parallel, profile_batch_vs_loop, advise_search,
+       kernel_walltime, roofline_table]
 
 
 def main() -> None:
@@ -318,6 +413,11 @@ def main() -> None:
                     help="perf canary: exit 1 if profile_batch_vs_loop "
                          "measures less than this batch-vs-loop speedup "
                          "(requires the benchmark to have run)")
+    ap.add_argument("--advise-gate", action="store_true",
+                    help="CI gate: exit 1 unless advise_search scored its "
+                         "32-candidate frontier via one batch evaluation "
+                         "(no scalar profiling) and the warm re-run "
+                         "collected nothing")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for fn in ALL:
@@ -340,6 +440,31 @@ def main() -> None:
                   f"{LAST_WARM_COLLECTED} point(s), expected 0 — the "
                   f"persistent sweep cache is not being hit",
                   file=sys.stderr)
+            sys.exit(1)
+    if args.advise_gate:
+        import sys
+        if LAST_ADVISE is None:
+            print("error: --advise-gate set but advise_search did not run",
+                  file=sys.stderr)
+            sys.exit(2)
+        a = LAST_ADVISE
+        problems = []
+        if a["candidates"] != 32:
+            problems.append(f"enumerated {a['candidates']} candidates, "
+                            f"expected 32")
+        if a["batch_evals"] != a["frontiers"]:
+            problems.append(f"{a['batch_evals']} batch evaluations for "
+                            f"{a['frontiers']} frontier(s) — must be one "
+                            f"per frontier")
+        if a["scalar_evals"]:
+            problems.append(f"{a['scalar_evals']} per-candidate scalar "
+                            f"profile_counters call(s), expected 0")
+        if a["warm_collected"]:
+            problems.append(f"warm re-advise collected "
+                            f"{a['warm_collected']} point(s), expected 0")
+        if problems:
+            print("error: advise_search gate failed: "
+                  + "; ".join(problems), file=sys.stderr)
             sys.exit(1)
 
 

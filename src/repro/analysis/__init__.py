@@ -36,6 +36,10 @@ from repro.analysis.providers import (  # noqa: F401
     get_provider,
     register_provider,
 )
+from repro.analysis.render import (  # noqa: F401
+    rows_to_csv,
+    union_fieldnames,
+)
 from repro.analysis.sweep_cache import (  # noqa: F401
     SweepCache,
     default_cache_root,

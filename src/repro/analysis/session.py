@@ -22,7 +22,6 @@ relative errors and the utilization delta.
 
 from __future__ import annotations
 
-import csv
 import dataclasses
 import io
 import json
@@ -34,6 +33,7 @@ import numpy as np
 
 from repro.analysis.device import Device, get_device
 from repro.analysis.providers import CounterProvider, get_provider
+from repro.analysis.render import rows_to_csv
 from repro.analysis.sweep_cache import SweepCache
 from repro.analysis.workload import WorkloadSpec
 from repro.core import bottleneck, profiler, qmodel
@@ -61,21 +61,31 @@ class SweepResult:
 
     # -- renderers --------------------------------------------------------
 
-    def to_rows(self) -> list[dict]:
+    def to_rows(self, structured_hints: bool = False) -> list[dict]:
         """One flat record per sweep point (the csv/json payload).
 
         ``e`` is the job-weighted mean across cores (matching the global
         ``e = O / N`` of ``CounterSet``/``validate``) and ``n_hat`` the
         max (the profile's peak concurrency estimate) — a multi-core
-        profile must not be reported from core 0 alone.
+        profile must not be reported from core 0 alone.  The verdict's
+        machine-usable ``hint`` rides along: compact ``action:family``
+        form by default (csv/text cells), the full structured dict with
+        ``structured_hints=True`` (the json payload).
         """
         rows = []
         for i, (p, v) in enumerate(zip(self.profiles, self.verdicts)):
+            if v.hint is None:
+                hint = None if structured_hints else ""
+            elif structured_hints:
+                hint = dataclasses.asdict(v.hint)
+            else:
+                hint = v.hint.compact()
             row = {
                 "label": p.label,
                 "bottleneck": v.bottleneck,
                 "saturated": v.saturated,
                 "comment": v.comment,
+                "hint": hint,
                 "scatter_model_U": p.scatter_utilization,
                 "speedup_vs_first": float(self.speedup_vs_first[i]),
                 "e": p.e,
@@ -90,29 +100,16 @@ class SweepResult:
         if fmt == "json":
             payload = {
                 "device": self.device.name,
-                "points": self.to_rows(),
+                "points": self.to_rows(structured_hints=True),
                 "shifts": [dataclasses.asdict(s) for s in self.shifts],
             }
             return json.dumps(payload, indent=2)
         if fmt == "csv":
-            rows = self.to_rows()
-            if not rows:
-                return ""
             # Heterogeneous sweeps produce ragged rows (a point's U_*
-            # columns depend on its unit set): the header must be the
-            # union across ALL rows, in first-appearance order, with
-            # missing cells written empty — fieldnames from rows[0] alone
-            # raises ValueError on the first later-only column.
-            fieldnames: list[str] = []
-            for row in rows:
-                for k in row:
-                    if k not in fieldnames:
-                        fieldnames.append(k)
-            buf = io.StringIO()
-            w = csv.DictWriter(buf, fieldnames=fieldnames, restval="")
-            w.writeheader()
-            w.writerows(rows)
-            return buf.getvalue()
+            # columns depend on its unit set): the shared union-header
+            # helper (also the advisor csv path) writes missing cells
+            # empty instead of raising on later-only columns.
+            return rows_to_csv(self.to_rows())
         if fmt == "text":
             buf = io.StringIO()
             multi = len(self.profiles) > 1
@@ -123,9 +120,11 @@ class SweepResult:
             for row in self.to_rows():
                 units = "  ".join(
                     f"{k[2:]}={row[k]:6.2%}" for k in row if k.startswith("U_"))
+                hint = f"  [{row['hint']}]" if row["hint"] else ""
                 buf.write(f"{row['label']:>28}  {units}  "
                           f"-> {row['bottleneck']}"
-                          f"{' (saturated)' if row['saturated'] else ''}\n")
+                          f"{' (saturated)' if row['saturated'] else ''}"
+                          f"{hint}\n")
             # shift lines are sweep properties: meaningless for one point
             if multi:
                 if self.shifts:
@@ -308,6 +307,27 @@ class Session:
         self._last = self._as_result(specs, profiles)
         return self._last
 
+    def advise(self, spec: WorkloadSpec, *, catalog=None, depth: int = 2,
+               beam_width: int = 8, top_k: int = 5, validate_top: int = 0,
+               parallel: Optional[int] = None):
+        """Search workload transforms around ``spec``; rank predicted fixes.
+
+        The ``repro.advisor`` subsystem as a session call: enumerate
+        legal transform compositions (channel rotation, bin replication,
+        CAS→FAO substitution, launch geometry, lane interleave — or a
+        custom ``catalog``), collect each candidate's counters through
+        this session's provider + memo + persistent cache, score every
+        frontier with one columnar ``profile_batch`` evaluation, and
+        return the ranked ``AdvisorReport``.  ``validate_top`` re-checks
+        that many top candidates through the ``kernel`` provider (paper
+        §5's model-vs-measured).
+        """
+        from repro.advisor.search import AdvisorSearch  # lazy: layer above
+        return AdvisorSearch(
+            self, catalog=catalog, depth=depth, beam_width=beam_width,
+        ).search(spec, top_k=top_k, validate_top=validate_top,
+                 parallel=parallel)
+
     def speedup(self, before: WorkloadSpec, after: WorkloadSpec) -> float:
         """Predicted speedup of ``after`` over ``before``.
 
@@ -372,6 +392,28 @@ class Session:
             raise RuntimeError("nothing profiled yet — call profile() or "
                                "sweep() before report()")
         return self._last.render(fmt)
+
+    # -- building blocks for layered tools (the advisor) ------------------
+
+    def collect_cached(self, spec: WorkloadSpec) -> CounterSet:
+        """``collect`` behind this session's memo + persistent cache.
+
+        The public face of the sweep engine's per-point cache resolution
+        (see ``_collect_memoized``): layered tools like the advisor call
+        this so their counter acquisition shares the same in-process
+        memo and on-disk ``SweepCache`` a ``sweep`` would use.
+        """
+        return self._collect_memoized(spec)
+
+    def profile_sets(self, csets: Sequence[CounterSet],
+                     ) -> list[profiler.WorkloadProfile]:
+        """Columnar model evaluation of pre-collected CounterSets.
+
+        One ``CounterFrame``/``profile_batch`` pass per ``num_cores``
+        group (a single pass when all rows share a core count — the
+        advisor's frontier invariant), in input order.
+        """
+        return self._profile_batch(list(csets))
 
     # -- internals --------------------------------------------------------
 

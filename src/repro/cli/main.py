@@ -1,20 +1,22 @@
 """``python -m repro`` — the paper's tool as a command line.
 
-Five subcommands over the ``repro.analysis`` Session API:
+Six subcommands over the ``repro.analysis`` Session API:
 
     devices    list registered devices and their table-cache state
     profile    one workload -> utilization report + verdict
     sweep      cartesian grid sweep (sizes x geometry), concurrent points
+    advise     search workload transforms, rank model-predicted fixes
     validate   multi-provider counter comparison (paper §5)
     compare    the §5 hist-vs-hist2 case study with a shift verdict
 
 Every command prints its report to stdout (``--format text|json|csv``;
-``devices`` and ``validate`` render ``text|json`` only) and can persist
-it with ``--output PATH``; ``sweep`` and ``compare`` additionally drop
-an artifact under ``results/cli/`` unless told not to, and cache the
-collected counters under ``results/cache/`` (``--no-cache`` opts out)
-so a repeated sweep skips collection and goes straight to the columnar
-batch model evaluation.
+``devices`` and ``validate`` render ``text|json`` only — unsupported
+values are rejected by argparse ``choices`` before any work happens)
+and can persist it with ``--output PATH``; ``sweep``, ``advise`` and
+``compare`` additionally drop an artifact under ``results/cli/`` unless
+told not to, and cache the collected counters under ``results/cache/``
+(``--no-cache`` opts out) so a repeated run skips collection and goes
+straight to the columnar batch model evaluation.
 The CLI builds ordinary ``WorkloadSpec``s and calls the same Session
 methods the Python API exposes, so its numbers are bit-identical to a
 scripted run.
@@ -125,15 +127,25 @@ def cmd_sweep(args) -> int:
     jobs = args.jobs if args.jobs is not None else min(DEFAULT_JOBS,
                                                        len(specs))
     results = {}
+    stats = {"collected": 0, "memo_hits": 0, "disk_hits": 0}
     for dev in devices:
         sess = Session(dev, provider=args.provider,
                        cache_dir=args.cache_dir, shift_tol=args.shift_tol,
                        persistent_cache=_sweep_cache(args))
         results[sess.device.name] = sess.sweep(specs, parallel=jobs)
+        for k in stats:
+            stats[k] += sess.stats[k]
     tag = "-".join(results)
     ext = {"text": "txt", "json": "json", "csv": "csv"}[args.format]
-    _emit(_render_sweeps(results, args.format), args,
-          default_artifact=f"sweep-{tag}.{ext}")
+    report = _render_sweeps(results, args.format)
+    if args.format == "text":
+        # collection accounting footer (text only: json/csv stay parseable
+        # and bit-identical between cold and warm runs)
+        report = (report if report.endswith("\n") else report + "\n") + (
+            f"cache: {stats['collected']} collected, "
+            f"{stats['memo_hits']} memo hits, "
+            f"{stats['disk_hits']} disk hits\n")
+    _emit(report, args, default_artifact=f"sweep-{tag}.{ext}")
     return 0
 
 
@@ -151,23 +163,45 @@ def _render_sweeps(results: dict, fmt: str) -> str:
                    for name, r in results.items()}
         return json.dumps({"devices": payload}, indent=2)
     if fmt == "csv":
-        import csv as csv_mod
-        import io
+        from repro.analysis.render import rows_to_csv
         rows = []
         for name, r in results.items():
             for row in r.to_rows():
                 rows.append({"device": name, **row})
-        fieldnames: list[str] = []
-        for row in rows:
-            for k in row:
-                if k not in fieldnames:
-                    fieldnames.append(k)
-        buf = io.StringIO()
-        w = csv_mod.DictWriter(buf, fieldnames=fieldnames, restval="")
-        w.writeheader()
-        w.writerows(rows)
-        return buf.getvalue()
+        return rows_to_csv(rows)
     return "\n".join(r.render("text") for r in results.values())
+
+
+def cmd_advise(args) -> int:
+    """Model-driven optimization advisor over one workload point.
+
+    Enumerates transform compositions around the workload (channel
+    rotation, bin replication, CAS→FAO substitution, launch geometry,
+    lane interleave), scores every frontier with one columnar
+    ``profile_batch`` evaluation, and prints the ranked predicted fixes.
+    Counter collection is cache-aware like ``sweep`` (``results/cache/``
+    by default, ``--no-cache`` opts out), so re-advising a workload
+    collects nothing; ``--validate-top N`` re-checks the N top-ranked
+    kernel-source candidates through the instrumented-kernel provider
+    (paper §5's model-vs-measured).
+    """
+    specs, axes = wl.build_specs(args)
+    specs = wl.expand_grid(specs, axes)
+    if len(specs) != 1:
+        raise ValueError(
+            f"advise takes exactly one workload point, got {len(specs)} — "
+            f"the advisor searches the transform space itself")
+    sess = Session(args.device, provider=args.provider,
+                   cache_dir=args.cache_dir,
+                   persistent_cache=_sweep_cache(args))
+    report = sess.advise(
+        specs[0], depth=args.depth, beam_width=args.beam_width,
+        top_k=args.top_k, validate_top=args.validate_top,
+        parallel=args.jobs)
+    ext = {"text": "txt", "json": "json", "csv": "csv"}[args.format]
+    _emit(report.render(args.format), args,
+          default_artifact=f"advise-{sess.device.name}.{ext}")
+    return 0
 
 
 def cmd_validate(args) -> int:
@@ -377,6 +411,32 @@ def build_parser() -> argparse.ArgumentParser:
                    help="do not read/write the results/cache/ counter "
                         "cache (re-collect every point)")
     p.set_defaults(func=cmd_sweep)
+
+    p = sub.add_parser(
+        "advise",
+        help="search workload transforms, rank predicted fixes")
+    _add_common(p)
+    _add_workload(p, multi=False)
+    p.add_argument("--top-k", type=int, default=5,
+                   help="how many ranked candidates to report "
+                        "(default %(default)s)")
+    p.add_argument("--validate-top", type=int, default=0,
+                   help="re-validate the N top-ranked kernel-source "
+                        "candidates via the kernel provider (default 0)")
+    p.add_argument("--depth", type=int, default=2,
+                   help="max transforms composed per candidate "
+                        "(default %(default)s)")
+    p.add_argument("--beam-width", type=int, default=8,
+                   help="compositions each search level extends "
+                        "(default %(default)s)")
+    p.add_argument("--jobs", type=int, default=None,
+                   help="concurrent collection threads per frontier")
+    p.add_argument("--no-artifact", action="store_true",
+                   help="do not write the default results/cli/ artifact")
+    p.add_argument("--no-cache", action="store_true",
+                   help="do not read/write the results/cache/ counter "
+                        "cache (re-collect every candidate)")
+    p.set_defaults(func=cmd_advise)
 
     p = sub.add_parser(
         "validate",

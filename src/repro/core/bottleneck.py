@@ -10,7 +10,7 @@ histogram moving from the shared-memory atomic unit to global memory at
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -20,6 +20,47 @@ SATURATED = 0.90   # unit considered saturated (a bottleneck) above this
 UNDERUTILIZED = 0.50
 
 
+@dataclasses.dataclass(frozen=True)
+class Hint:
+    """Machine-usable optimization hint attached to a verdict.
+
+    ``comment`` is prose for humans; ``Hint`` is the same advice as
+    data: which ``unit`` the advice targets, a stable ``action`` id, and
+    the ``repro.advisor`` transform ``family`` that implements it — so a
+    tool (or the advisor itself) can act on a verdict without parsing
+    English.
+    """
+
+    unit: str                # the unit the advice targets
+    action: str              # stable id: reduce_contention | ...
+    family: str              # advisor transform family implementing it
+
+    def compact(self) -> str:
+        """Flat ``action:family@unit`` form for text/csv cells."""
+        return f"{self.action}:{self.family}@{self.unit}"
+
+
+# Per-unit advice for a saturated (or leading) server: what to do about
+# it, and which advisor transform family does that.  Units without a
+# shipped transform family still get a stable family name so the hint
+# remains actionable by external tooling.
+_UNIT_HINTS = {
+    "scatter": ("reduce_contention", "rotation"),
+    "hbm": ("reduce_traffic", "tiling"),
+    "mxu": ("reduce_flops", "precision"),
+    "ici": ("reduce_collectives", "sharding"),
+}
+
+
+def _hint_for(name: str, u: float) -> Hint:
+    if u <= UNDERUTILIZED:
+        # nothing saturated: concurrency/overhead is the lever
+        return Hint(unit=name, action="raise_concurrency",
+                    family="geometry")
+    action, family = _UNIT_HINTS.get(name, ("rebalance", "geometry"))
+    return Hint(unit=name, action=action, family=family)
+
+
 @dataclasses.dataclass
 class BottleneckVerdict:
     label: str
@@ -27,6 +68,7 @@ class BottleneckVerdict:
     utilization: float
     saturated: bool
     comment: str = ""
+    hint: Optional[Hint] = None
 
 
 @dataclasses.dataclass
@@ -51,7 +93,7 @@ def classify(profile: WorkloadProfile) -> BottleneckVerdict:
         comment = f"{name} leading but unsaturated"
     return BottleneckVerdict(label=profile.label, bottleneck=name,
                              utilization=u, saturated=u >= SATURATED,
-                             comment=comment)
+                             comment=comment, hint=_hint_for(name, u))
 
 
 SHIFT_TOL = 0.02   # relative lead a new unit needs to count as a shift

@@ -1,0 +1,376 @@
+"""Advisor subsystem tests: transforms, search invariants, report, hints.
+
+Covers the PR's acceptance criteria directly:
+
+  * every frontier is scored by a single ``CounterFrame``/``profile_batch``
+    evaluation (counted by wrapping the profiler entry points),
+  * a warm re-advise against the persistent sweep cache collects nothing,
+  * the advisor rediscovers ``hist2``'s channel rotation from the plain
+    ``hist`` workload with an in-band predicted speedup, and the top
+    candidate's kernel-provider validation matches bit for bit,
+
+plus the ``speedup_estimate`` property suite (identity, after-window
+monotonicity) and advisor determinism.
+"""
+
+import csv as csv_mod
+import io
+import json
+
+import numpy as np
+import pytest
+
+from repro.advisor import (
+    AdvisorSearch,
+    CasToFao,
+    ChannelRotation,
+    LaneInterleave,
+    Replicate,
+    SetPipelineDepth,
+    SetWavesPerTile,
+    TransformCost,
+    default_catalog,
+)
+from repro.analysis import Session, WorkloadSpec
+from repro.core import bottleneck, profiler, timing
+from repro.core.profiler import UnitUtilization, WorkloadProfile
+from repro.data.images import make_image
+
+
+@pytest.fixture(scope="module")
+def sess():
+    return Session("v5e")
+
+
+def _solid_idx(n=1 << 12):
+    return np.zeros(n, np.int64)
+
+
+def _clustered_idx(n=1 << 12, bins=64):
+    return np.repeat(np.arange(bins, dtype=np.int64), n // bins)
+
+
+def _prof(label, T):
+    """Minimal profile with a given per-core window (for speedup props)."""
+    T = np.asarray(T, np.float64)
+    return WorkloadProfile(
+        label=label, per_core=[],
+        units=[UnitUtilization("scatter", float(T.max()) / 2, float(T.max()))],
+        T_cycles=T)
+
+
+# -- speedup_estimate properties ---------------------------------------------
+
+
+def test_speedup_identity_transform_is_one(sess):
+    """A transform that changes nothing predicts exactly 1.0."""
+    spec = WorkloadSpec.from_indices(_solid_idx(), 256, label="s",
+                                     waves_per_tile=8)
+    prof = sess.profile(spec)
+    assert bottleneck.speedup_estimate(prof, prof) == 1.0
+
+
+def test_speedup_monotone_in_after_window():
+    """Growing the after-window can only lower the predicted speedup."""
+    before = _prof("before", [1000.0, 900.0])
+    windows = [200.0, 500.0, 1000.0, 2000.0, 8000.0]
+    speedups = [bottleneck.speedup_estimate(before, _prof("after", [w]))
+                for w in windows]
+    assert all(a >= b for a, b in zip(speedups, speedups[1:]))
+    # and it crosses parity exactly at equal windows
+    assert bottleneck.speedup_estimate(before, _prof("eq", [1000.0])) == 1.0
+
+
+# -- transforms ---------------------------------------------------------------
+
+
+def test_rotation_legality_and_apply():
+    img = make_image("solid", 1 << 10)
+    spec = WorkloadSpec.from_histogram(img, label="h", variant="hist")
+    t = ChannelRotation()
+    assert t.legal(spec)
+    out = t.apply(spec)
+    assert out.kernel.params["variant"] == "hist2"
+    assert out.label == "h+rotate-channels"
+    assert not t.legal(out)              # can't rotate twice
+    assert spec.kernel.params["variant"] == "hist"   # original untouched
+
+
+def test_replicate_apply_splits_bins():
+    spec = WorkloadSpec.from_indices(_solid_idx(64), 16, label="s")
+    t = Replicate(4)
+    assert t.legal(spec)
+    out = t.apply(spec)
+    assert out.num_bins == 64
+    idx = np.asarray(out.indices)
+    # all-zero stream becomes round-robin replicas 0..3
+    assert set(idx.tolist()) == {0, 1, 2, 3}
+    cost = t.cost(spec)
+    assert cost.scratch_bytes == 16 * 3 * 4
+    assert cost.reduce_flops == 64
+    with pytest.raises(ValueError):
+        Replicate(1)
+
+
+def test_cas_to_fao_legality_and_apply():
+    spec = WorkloadSpec.from_indices(_solid_idx(64), 16, label="c",
+                                     job_class=timing.CAS)
+    t = CasToFao()
+    assert t.legal(spec)
+    assert t.apply(spec).job_class == timing.FAO
+    assert not t.legal(spec.with_(job_class=timing.FAO))
+    weighted = WorkloadSpec.from_histogram(
+        make_image("solid", 1 << 8), label="w", weighted=True)
+    assert t.legal(weighted)
+    out = t.apply(weighted)
+    assert out.kernel.params["weighted"] is False
+    assert out.kernel.params["force_fao"] is True
+
+
+def test_geometry_effective_default_is_not_a_candidate():
+    spec = WorkloadSpec.from_indices(_solid_idx(64), 16, label="g",
+                                     waves_per_tile=8)
+    assert not SetWavesPerTile(8).legal(spec)
+    assert SetWavesPerTile(32).legal(spec)
+    # pipeline_depth None resolves to 2 everywhere: depth=2 is a no-op
+    assert spec.pipeline_depth is None
+    assert not SetPipelineDepth(2).legal(spec)
+    assert SetPipelineDepth(4).legal(spec)
+    # unset waves_per_tile resolves per source family: indices -> 1,
+    # histogram kernels -> the kernel's own tiling — re-stating the
+    # resolved default must not become a (no-op) candidate
+    unset = WorkloadSpec.from_indices(_solid_idx(64), 16, label="u")
+    assert not SetWavesPerTile(1).legal(unset)
+    assert SetWavesPerTile(8).legal(unset)
+    from repro.kernels.histogram import ops as hist_ops
+    img = make_image("solid", 1 << 10)
+    hist = WorkloadSpec.from_histogram(img, label="h", variant="hist")
+    default = hist_ops.default_waves_per_tile(img)
+    assert not SetWavesPerTile(default).legal(hist)
+    assert SetWavesPerTile(default * 2).legal(hist)
+
+
+def test_interleave_spreads_clusters():
+    spec = WorkloadSpec.from_indices(_clustered_idx(), 64, label="cl")
+    t = LaneInterleave()
+    assert t.legal(spec)
+    out = t.apply(spec)
+    idx = np.asarray(out.indices)
+    assert sorted(idx.tolist()) == sorted(_clustered_idx().tolist())
+    # first commit group now holds distant elements, not one run
+    assert len(set(idx[:32].tolist())) > 1
+
+
+def test_cost_merge_sums_and_joins():
+    merged = TransformCost.merge([
+        TransformCost(scratch_bytes=8, reduce_flops=2, note="a"),
+        TransformCost(scratch_bytes=4, note="b"),
+        TransformCost(),
+    ])
+    assert merged.scratch_bytes == 12
+    assert merged.reduce_flops == 2
+    assert merged.note == "a; b"
+
+
+# -- search invariants --------------------------------------------------------
+
+
+def test_one_batch_eval_per_frontier_no_scalar_profiling(monkeypatch):
+    """Acceptance: every frontier is one profile_batch, zero scalar calls."""
+    calls = {"batch": 0, "scalar": 0}
+    orig_batch = profiler.profile_batch
+
+    def counting_batch(*a, **kw):
+        calls["batch"] += 1
+        return orig_batch(*a, **kw)
+
+    def forbidden(*a, **kw):
+        calls["scalar"] += 1
+        raise AssertionError("advisor must never scalar-profile")
+
+    monkeypatch.setattr(profiler, "profile_batch", counting_batch)
+    monkeypatch.setattr(profiler, "profile_counters", forbidden)
+    sess = Session("v5e")
+    spec = WorkloadSpec.from_indices(_solid_idx(), 256, label="s",
+                                     waves_per_tile=8)
+    report = sess.advise(spec, depth=2, beam_width=4)
+    assert calls["scalar"] == 0
+    assert report.stats["frontiers"] == 2
+    assert calls["batch"] == report.stats["frontiers"]
+    assert report.stats["batch_evals"] == report.stats["frontiers"]
+
+
+def test_warm_rerun_with_sweep_cache_collects_nothing(tmp_path):
+    """Acceptance: persistent-cache re-advise does zero counter collection."""
+    spec = WorkloadSpec.from_indices(_clustered_idx(), 64, label="cl",
+                                     waves_per_tile=8)
+    cold = Session("v5e", persistent_cache=str(tmp_path))
+    r1 = cold.advise(spec, depth=2, beam_width=4)
+    assert cold.stats["collected"] > 0
+    warm = Session("v5e", persistent_cache=str(tmp_path))
+    r2 = warm.advise(spec, depth=2, beam_width=4)
+    assert warm.stats["collected"] == 0
+    assert warm.stats["disk_hits"] > 0
+    # and the served-from-disk ranking is bit-identical
+    assert [(c.label, c.speedup) for c in r2.candidates] \
+        == [(c.label, c.speedup) for c in r1.candidates]
+
+
+def test_advisor_deterministic_ranking():
+    """Same spec + seed -> identical ranking from independent sessions."""
+    rng1 = np.random.default_rng(7)
+    rng2 = np.random.default_rng(7)
+    reports = []
+    for rng in (rng1, rng2):
+        idx = rng.integers(0, 64, 1 << 12)
+        spec = WorkloadSpec.from_indices(np.sort(idx), 64, label="det",
+                                         waves_per_tile=8)
+        reports.append(Session("v5e").advise(spec, depth=2, beam_width=4))
+    a, b = reports
+    assert [c.label for c in a.candidates] == [c.label for c in b.candidates]
+    assert [c.speedup for c in a.candidates] \
+        == [c.speedup for c in b.candidates]
+
+
+def test_family_once_and_dedup():
+    """No composition reuses a family; no-op rewrites dedup away."""
+    spec = WorkloadSpec.from_indices(_solid_idx(), 256, label="s",
+                                     waves_per_tile=8)
+    report = Session("v5e").advise(spec, depth=3, beam_width=8)
+    for c in report.candidates:
+        fams = c.families
+        assert len(fams) == len(set(fams))
+        # interleaving an all-equal stream is a no-op: deduped against
+        # the baseline fingerprint, so it must not appear alone
+        assert c.names != ("interleave-lanes",)
+
+
+def test_no_legal_transform_reports_baseline_only(sess):
+    spec = WorkloadSpec.from_indices(_solid_idx(64), 16, label="tiny")
+    report = sess.advise(spec, catalog=[ChannelRotation()])
+    assert report.candidates == []
+    assert report.best is None
+    assert report.stats["frontiers"] == 0
+    assert "0 candidates" in report.render("text")
+    assert json.loads(report.render("json"))["candidates"] == []
+
+
+# -- the §5 rediscovery (example's acceptance, test-sized) --------------------
+
+
+def test_advisor_rediscovers_hist2(sess):
+    """From plain hist, the top-ranked fix is the rotation family, its
+    predicted speedup is in the paper's up-to-30% band, and the kernel
+    provider confirms the modeled counters bit for bit."""
+    img = make_image("solid", 1 << 14)
+    spec = WorkloadSpec.from_histogram(
+        img, label="solid-16K", variant="hist", waves_per_tile=8,
+        overhead_cycles=2500.0)
+    report = sess.advise(spec, depth=2, top_k=5, validate_top=1)
+    top = report.best
+    assert "rotation" in top.families
+    assert 1.0 < top.speedup <= 1.30
+    assert top.validation is not None
+    assert top.validation.rel_err("kernel", "e") == 0.0
+    assert top.validation.max_rel_err == 0.0
+    # the validation line must be rendered
+    assert "validated (kernel vs trace)" in report.render("text")
+
+
+# -- report rendering ---------------------------------------------------------
+
+
+def test_report_csv_ragged_roundtrip(sess):
+    """Candidates carry different param_* columns: the shared union-header
+    helper must round-trip them with empty holes (satellite bugfix)."""
+    spec = WorkloadSpec.from_indices(_clustered_idx(), 64, label="cl",
+                                     waves_per_tile=8)
+    report = sess.advise(spec, depth=2, beam_width=8, top_k=10)
+    rows = list(csv_mod.DictReader(io.StringIO(report.render("csv"))))
+    assert len(rows) == len(report.top(10))
+    cols = set(rows[0])
+    assert {"rank", "transforms", "predicted_speedup",
+            "predicted_bottleneck", "scratch_bytes", "cost_note"} <= cols
+    # at least one ragged param column, blank where not applicable
+    param_cols = [c for c in cols if c.startswith("param_")]
+    assert param_cols
+    assert any(r[c] == "" for r in rows for c in param_cols)
+
+
+def test_report_json_schema(sess):
+    spec = WorkloadSpec.from_indices(_solid_idx(), 256, label="s",
+                                     waves_per_tile=8)
+    payload = json.loads(sess.advise(spec, depth=1).render("json"))
+    assert set(payload) == {"device", "baseline", "candidates", "stats"}
+    assert payload["baseline"]["bottleneck"]
+    assert payload["baseline"]["hint"] is not None
+    assert {"rank", "label", "transforms", "families", "predicted_speedup",
+            "predicted_bottleneck", "shifts_bottleneck"} \
+        <= set(payload["candidates"][0])
+    assert payload["stats"]["batch_evals"] == payload["stats"]["frontiers"]
+
+
+def test_report_unknown_format_raises(sess):
+    spec = WorkloadSpec.from_indices(_solid_idx(64), 16, label="x")
+    report = sess.advise(spec, depth=1)
+    with pytest.raises(ValueError, match="unknown report format"):
+        report.render("yaml")
+
+
+def test_candidate_cost_uses_pre_transform_spec(sess):
+    """Replicate's annotations describe the bins it multiplies: the report
+    must carry cost(pre-apply spec), not cost of the rewritten spec."""
+    spec = WorkloadSpec.from_indices(_clustered_idx(), 64, label="cl",
+                                     waves_per_tile=8)
+    report = sess.advise(spec, catalog=[Replicate(8)], depth=1)
+    (cand,) = report.candidates
+    want = Replicate(8).cost(spec)
+    assert cand.cost.scratch_bytes == want.scratch_bytes == 64 * 7 * 4
+    assert cand.cost.reduce_flops == want.reduce_flops == 64 * 8
+
+
+def test_report_U_is_the_bottleneck_units(sess):
+    """The utilization printed next to a bottleneck name must belong to
+    that unit — an hbm-bound row must not show the scatter model's U."""
+    spec = WorkloadSpec.from_indices(
+        _clustered_idx(), 64, label="membound", waves_per_tile=8,
+        job_class=timing.CAS, bytes_read=1e9)
+    report = sess.advise(spec, depth=1, top_k=5)
+    assert report.baseline_verdict.bottleneck == "hbm"
+    payload = json.loads(report.render("json"))
+    assert payload["baseline"]["utilization"] \
+        == report.baseline_verdict.utilization
+    for row, cand in zip(report.to_rows(), report.top()):
+        assert row["predicted_U"] == \
+            cand.profile.unit(row["predicted_bottleneck"]).utilization
+        assert row["predicted_scatter_U"] == cand.profile.scatter_utilization
+
+
+# -- structured classify hints (satellite) ------------------------------------
+
+
+def test_classify_attaches_structured_hint(sess):
+    spec = WorkloadSpec.from_indices(_solid_idx(1 << 14), 256, label="hot",
+                                     waves_per_tile=32)
+    v = sess.classify(spec)
+    assert v.hint is not None
+    assert v.hint.unit == v.bottleneck
+    if v.saturated:
+        assert v.hint.action == "reduce_contention"
+        assert v.hint.family == "rotation"
+    assert ":" in v.hint.compact() and "@" in v.hint.compact()
+
+
+def test_hint_rendered_in_session_reports(sess):
+    spec = WorkloadSpec.from_indices(_solid_idx(1 << 14), 256, label="hot",
+                                     waves_per_tile=32)
+    sess.profile(spec)
+    payload = json.loads(sess.report("json"))
+    hint = payload["points"][0]["hint"]
+    assert isinstance(hint, dict)
+    assert set(hint) == {"unit", "action", "family"}
+    text = sess.report("text")
+    assert f"[{hint['action']}:{hint['family']}@{hint['unit']}]" in text
+    rows = list(csv_mod.DictReader(io.StringIO(sess.report("csv"))))
+    assert rows[0]["hint"] == \
+        f"{hint['action']}:{hint['family']}@{hint['unit']}"

@@ -266,9 +266,9 @@ def test_render_json_schema_is_stable(sess):
     payload = json.loads(sess.report("json"))
     assert set(payload) == {"device", "points", "shifts"}
     assert set(payload["points"][0]) == {
-        "label", "bottleneck", "saturated", "comment", "scatter_model_U",
-        "speedup_vs_first", "e", "n_hat", "U_scatter", "U_hbm", "U_mxu",
-        "U_ici"}
+        "label", "bottleneck", "saturated", "comment", "hint",
+        "scatter_model_U", "speedup_vs_first", "e", "n_hat", "U_scatter",
+        "U_hbm", "U_mxu", "U_ici"}
 
 
 def test_render_unknown_fmt_raises(sess):

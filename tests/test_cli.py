@@ -345,14 +345,133 @@ def test_help_lists_all_subcommands(capsys):
     with pytest.raises(SystemExit):
         main(["--help"])
     out = capsys.readouterr().out
-    for cmd in ("devices", "profile", "sweep", "validate", "compare"):
+    for cmd in ("devices", "profile", "sweep", "advise", "validate",
+                "compare"):
         assert cmd in out
 
 
 @pytest.mark.parametrize(
-    "cmd", ["devices", "profile", "sweep", "validate", "compare"])
+    "cmd", ["devices", "profile", "sweep", "advise", "validate", "compare"])
 def test_subcommand_help(capsys, cmd):
     with pytest.raises(SystemExit):
         main([cmd, "--help"])
     out = capsys.readouterr().out
     assert "--format" in out
+
+
+# -- advise -------------------------------------------------------------------
+
+
+ADVISE_ARGV = ["advise", "--workload", "indices", "--size", "2^12",
+               "--dist", "solid", "--waves-per-tile", "8", "--top-k", "3"]
+
+
+def test_advise_text(capsys):
+    rc, out = run_cli(ADVISE_ARGV + ["--no-artifact", "--no-cache"], capsys)
+    assert rc == 0
+    assert "== advisor:" in out
+    assert "rank  1" in out
+    assert "baseline: bottleneck=" in out
+
+
+def test_advise_json_matches_session(capsys):
+    rc, out = run_cli(ADVISE_ARGV + [
+        "--format", "json", "--no-artifact", "--no-cache"], capsys)
+    assert rc == 0
+    payload = json.loads(out)
+    idx = np.zeros(1 << 12, np.int64)
+    spec = WorkloadSpec.from_indices(idx, 256, label="solid-4096",
+                                     waves_per_tile=8)
+    api = Session("v5e").advise(spec, top_k=3)
+    got = payload["candidates"]
+    want = api.to_rows()
+    assert [r["label"] for r in got] == [r["label"] for r in want]
+    assert [r["predicted_speedup"] for r in got] \
+        == [r["predicted_speedup"] for r in want]       # bit-equal
+
+
+def test_advise_csv_and_artifact(capsys, tmp_path):
+    rc, out = run_cli(ADVISE_ARGV + ["--format", "csv"], capsys)
+    assert rc == 0
+    rows = list(csv_mod.DictReader(io.StringIO(out)))
+    assert len(rows) == 3
+    assert rows[0]["rank"] == "1"
+    artifact = tmp_path / "results" / "cli" / "advise-v5e.csv"
+    assert artifact.exists()
+    # capsys normalizes the csv writer's \r\n: compare parsed rows
+    assert list(csv_mod.DictReader(io.StringIO(artifact.read_text()))) \
+        == rows
+
+
+def test_advise_warm_cache_skips_collection(capsys, tmp_path):
+    from repro.analysis.providers.trace import TraceProvider
+
+    calls = []
+    orig = TraceProvider.collect
+
+    def counting(self, spec, device):
+        calls.append(spec.label)
+        return orig(self, spec, device)
+
+    try:
+        TraceProvider.collect = counting
+        argv = ADVISE_ARGV + ["--format", "json", "--no-artifact"]
+        rc, out1 = run_cli(argv, capsys)
+        assert rc == 0
+        assert calls
+        n_cold = len(calls)
+        rc, out2 = run_cli(argv, capsys)
+        assert rc == 0
+        assert len(calls) == n_cold     # warm re-advise: zero collection
+        cold, warm = json.loads(out1), json.loads(out2)
+        # collection stats legitimately differ (that is the point);
+        # the ranking and every prediction must be bit-identical
+        assert warm["candidates"] == cold["candidates"]
+        assert warm["baseline"] == cold["baseline"]
+        assert warm["stats"]["collected"] == 0
+        assert warm["stats"]["disk_hits"] > 0
+    finally:
+        TraceProvider.collect = orig
+
+
+def test_advise_rejects_multi_point(capsys):
+    # advise is single-point: --size is not multi-valued, argparse rejects
+    with pytest.raises(SystemExit) as exc:
+        main(["advise", "--size", "2^12", "2^13", "--no-artifact"])
+    assert exc.value.code == 2
+
+
+# -- format hardening + cache footer (satellite) ------------------------------
+
+
+@pytest.mark.parametrize("cmd,argv", [
+    ("devices", ["devices"]),
+    ("validate", ["validate", "--workload", "histogram",
+                  "--pixels", "2^10"]),
+])
+def test_text_json_only_commands_reject_csv_up_front(capsys, cmd, argv):
+    """argparse ``choices`` rejects csv before any work happens."""
+    with pytest.raises(SystemExit) as exc:
+        main(argv + ["--format", "csv"])
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "--format" in err and "csv" in err
+
+
+def test_sweep_text_cache_footer(capsys):
+    argv = ["sweep", "--size", "2^12", "--waves-per-tile", "4", "8",
+            "--no-artifact"]
+    rc, out = run_cli(argv, capsys)
+    assert rc == 0
+    assert "cache: 2 collected, 0 memo hits, 0 disk hits" in out
+    # warm run: both points served from the persistent cache
+    rc, out = run_cli(argv, capsys)
+    assert rc == 0
+    assert "cache: 0 collected, 0 memo hits, 2 disk hits" in out
+    # json/csv reports stay parseable: no footer
+    rc, out = run_cli(argv + ["--format", "json"], capsys)
+    assert rc == 0
+    json.loads(out)
+    rc, out = run_cli(argv + ["--format", "csv"], capsys)
+    assert rc == 0
+    assert "cache:" not in out
