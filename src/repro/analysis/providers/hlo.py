@@ -40,6 +40,9 @@ class HloProvider:
             flops, nbytes = float(cost.flops), float(cost.bytes)
             wire = float(cost.collective_wire_bytes)
             meta["unresolved_loops"] = cost.unresolved_loops
+            if cost.collectives:
+                meta["collectives"] = hlo_mod.CollectiveSummary(
+                    ops=cost.collectives).by_opcode()
         else:
             raise ValueError(
                 f"WorkloadSpec {spec.label!r} has no compiled/HLO source — "

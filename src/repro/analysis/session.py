@@ -96,6 +96,16 @@ class SweepResult:
             rows.append(row)
         return rows
 
+    def _point_meta(self) -> dict[str, dict]:
+        """Non-empty provider meta per point label (HLO provider fills
+        ``unresolved_loops`` / ``collectives``; trace sources have none)."""
+        out: dict[str, dict] = {}
+        for p in self.profiles:
+            meta = (p.params or {}).get("meta") or {}
+            if meta:
+                out[p.label] = meta
+        return out
+
     def render(self, fmt: str = "text") -> str:
         if fmt == "json":
             payload = {
@@ -103,7 +113,10 @@ class SweepResult:
                 "points": self.to_rows(structured_hints=True),
                 "shifts": [dataclasses.asdict(s) for s in self.shifts],
             }
-            return json.dumps(payload, indent=2)
+            meta = self._point_meta()
+            if meta:
+                payload["meta"] = meta
+            return json.dumps(payload, indent=2, default=str)
         if fmt == "csv":
             # Heterogeneous sweeps produce ragged rows (a point's U_*
             # columns depend on its unit set): the shared union-header
@@ -134,6 +147,22 @@ class SweepResult:
                                   f"({s.label_before} -> {s.label_after})\n")
                 else:
                     buf.write("no bottleneck shifts in sweep\n")
+            for label, meta in self._point_meta().items():
+                parts = []
+                if meta.get("unresolved_loops"):
+                    parts.append(f"{meta['unresolved_loops']} unresolved "
+                                 "loop trip count(s) — costs are lower "
+                                 "bounds")
+                coll = meta.get("collectives")
+                if coll:
+                    n = sum(int(d.get("count", 0)) for d in coll.values())
+                    wire = sum(float(d.get("wire_bytes", 0.0))
+                               for d in coll.values())
+                    parts.append(f"{n} collective op(s), "
+                                 f"{wire / 1e6:.1f} MB modeled wire traffic")
+                if parts:
+                    buf.write(f"hlo meta [{label}]: " + "; ".join(parts)
+                              + "\n")
             return buf.getvalue()
         raise ValueError(f"unknown report format {fmt!r} "
                          "(expected 'text', 'json' or 'csv')")
@@ -327,6 +356,23 @@ class Session:
             self, catalog=catalog, depth=depth, beam_width=beam_width,
         ).search(spec, top_k=top_k, validate_top=validate_top,
                  parallel=parallel)
+
+    def audit(self, source, *, label: str = "module", rules=None,
+              suppress: Sequence[str] = (), num_cores: int = 8):
+        """Static contention lint of an HLO-bearing source.
+
+        ``source`` may be HLO module text, a jax ``Lowered`` (audited at
+        its pre-optimization HLO), a jax ``Compiled``, or a
+        ``WorkloadSpec`` built with ``from_compiled``.  Scans for
+        atomic-shaped sites (scatters, KV-cache writes, one-hot /
+        sort-segment histograms), scores each matched rule with one
+        columnar model pass, and returns an ``AuditReport`` — this
+        session's trace/kernel providers are never invoked.
+        """
+        from repro.audit import audit_source  # lazy: layer above
+        return audit_source(source, session=self, label=label,
+                            rules=rules, suppress=suppress,
+                            num_cores=num_cores)
 
     def speedup(self, before: WorkloadSpec, after: WorkloadSpec) -> float:
         """Predicted speedup of ``after`` over ``before``.

@@ -1,0 +1,155 @@
+"""repro.audit — static HLO contention linter over the model zoo.
+
+Layers (providers -> **audit** -> advisor):
+
+* ``scanner``  — instruction-graph walk of (pre-opt) HLO for
+  atomic-shaped idioms (scatters, KV-cache DUS writes, one-hot and
+  sort-segment histogram lowerings),
+* ``rules``    — declarative catalog (ATOM001/002/003, BANK001,
+  GEOM001 + the AUDIT000 module note) scoring each site with one
+  columnar model pass — zero kernel executions,
+* ``report``   — text/json/csv/SARIF renderers and ``# repro: noqa``
+  suppression,
+* ``zoo``      — config -> per-step pre-optimization HLO lowering
+  (imports jax; kept out of this module's import path).
+
+Entry points: ``audit_hlo`` (one module text), ``audit_source`` (text /
+Lowered / Compiled / WorkloadSpec — what ``Session.audit`` calls), and
+``audit_config`` (a zoo config end to end).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.audit import rules as rules_mod
+from repro.audit.report import AuditReport, exit_code, merge, parse_noqa
+from repro.audit.rules import CATALOG, Finding, Rule
+from repro.audit.scanner import AtomicSite, ScanResult, scan_hlo
+
+__all__ = [
+    "AtomicSite", "AuditReport", "CATALOG", "Finding", "Rule",
+    "ScanResult", "audit_config", "audit_hlo", "audit_source",
+    "exit_code", "merge", "parse_noqa", "scan_hlo",
+]
+
+
+def _device_name(session) -> str:
+    dev = getattr(session, "device", None)
+    return getattr(dev, "name", str(dev))
+
+
+def _make_session(device: str = "v5e"):
+    from repro.analysis.session import Session  # lazy: keeps import light
+    return Session(device)
+
+
+def audit_hlo(text: str, *, session=None, label: str = "module",
+              rules: Optional[Sequence[Rule]] = None,
+              suppress: Sequence[str] = (), hlo_uri: str = "",
+              num_cores: int = 8) -> AuditReport:
+    """Scan one HLO module text and score every finding.
+
+    Scoring synthesizes index streams and evaluates them in a single
+    ``session.profile_sets`` pass; the session's trace/kernel providers
+    are never invoked.
+    """
+    if session is None:
+        session = _make_session()
+    scan = scan_hlo(text)
+    findings = rules_mod.evaluate(
+        scan, session, label=label, rules=rules or CATALOG,
+        suppress=suppress, hlo_uri=hlo_uri, num_cores=num_cores)
+    return AuditReport(
+        label=label, device=_device_name(session), findings=findings,
+        steps=[label], sites_scanned=len(scan.sites),
+        instructions_scanned=scan.num_instructions)
+
+
+def _source_text(source) -> str:
+    """HLO text from str / WorkloadSpec / jax Lowered / jax Compiled."""
+    if isinstance(source, str):
+        return source
+    hlo_text = getattr(source, "hlo_text", None)
+    if hlo_text:
+        return hlo_text
+    compiled = getattr(source, "compiled", None)
+    if compiled is not None:       # WorkloadSpec.from_compiled(...)
+        return compiled.as_text()
+    if hasattr(source, "compiler_ir"):    # jax Lowered: pre-opt HLO
+        from repro.launch.lowering import pre_optimization_hlo
+        return pre_optimization_hlo(source)
+    if hasattr(source, "as_text"):        # jax Compiled: post-opt HLO
+        return source.as_text()
+    raise ValueError(
+        f"cannot extract HLO from {type(source).__name__!r} — pass module "
+        "text, a jax Lowered/Compiled, or a WorkloadSpec built with "
+        "WorkloadSpec.from_compiled(...)")
+
+
+def audit_source(source, *, session=None, label: str = "module",
+                 rules: Optional[Sequence[Rule]] = None,
+                 suppress: Sequence[str] = (),
+                 num_cores: int = 8) -> AuditReport:
+    """Audit any HLO-bearing source (what ``Session.audit`` delegates to)."""
+    if label == "module":
+        label = getattr(source, "label", label)
+    return audit_hlo(_source_text(source), session=session, label=label,
+                     rules=rules, suppress=suppress, num_cores=num_cores)
+
+
+def config_noqa(arch: str) -> set[str]:
+    """``# repro: noqa`` allowlist declared in a config's defining module."""
+    import importlib
+    import inspect
+
+    from repro.configs import ARCHS
+    try:
+        mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+        return parse_noqa(inspect.getsource(mod))
+    except Exception:
+        return set()
+
+
+def audit_config(arch: str, *, session=None,
+                 steps: Optional[Sequence[str]] = None,
+                 reduced: bool = False, variant: str = "base",
+                 rules: Optional[Sequence[Rule]] = None,
+                 extra_suppress: Sequence[str] = (),
+                 hlo_sink=None, num_cores: int = 8) -> AuditReport:
+    """Audit every applicable step of a zoo config.
+
+    Suppressions come from ``# repro: noqa RULE,...`` comments in the
+    config's defining module, plus ``extra_suppress``.  ``hlo_sink``,
+    when given, is called with ``(step, hlo_text)`` per lowered step and
+    returns the artifact URI recorded in SARIF locations (or None).
+    """
+    from repro.audit import zoo  # lazy: imports jax
+
+    if session is None:
+        session = _make_session()
+    arch = zoo.normalize_arch(arch)
+    suppress = set(extra_suppress) | config_noqa(arch)
+    texts = zoo.lower_config_steps(arch, steps=steps, reduced=reduced,
+                                   variant=variant)
+    findings: list[Finding] = []
+    done_steps: list[str] = []
+    sites = instrs = 0
+    for step, text in texts.items():
+        uri = None
+        if hlo_sink is not None:
+            uri = hlo_sink(step, text)
+        rep = audit_hlo(text, session=session, label=f"{arch}/{step}",
+                        rules=rules, suppress=suppress,
+                        hlo_uri=uri or "", num_cores=num_cores)
+        findings.extend(rep.findings)
+        done_steps.append(step)
+        sites += rep.sites_scanned
+        instrs += rep.instructions_scanned
+    order = {"error": 0, "warning": 1, "note": 2}
+    findings.sort(key=lambda f: (order[f.severity],
+                                 -(f.utilization or 0.0), f.label))
+    return AuditReport(
+        label=arch, device=_device_name(session), findings=findings,
+        steps=done_steps, sites_scanned=sites,
+        instructions_scanned=instrs)

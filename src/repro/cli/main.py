@@ -1,6 +1,6 @@
 """``python -m repro`` — the paper's tool as a command line.
 
-Six subcommands over the ``repro.analysis`` Session API:
+Seven subcommands over the ``repro.analysis`` Session API:
 
     devices    list registered devices and their table-cache state
     profile    one workload -> utilization report + verdict
@@ -8,15 +8,20 @@ Six subcommands over the ``repro.analysis`` Session API:
     advise     search workload transforms, rank model-predicted fixes
     validate   multi-provider counter comparison (paper §5)
     compare    the §5 hist-vs-hist2 case study with a shift verdict
+    audit      static HLO contention lint (model zoo / --hlo-file), can
+               gate CI via --fail-on and emit SARIF
 
 Every command prints its report to stdout (``--format text|json|csv``;
-``devices`` and ``validate`` render ``text|json`` only — unsupported
-values are rejected by argparse ``choices`` before any work happens)
+``devices`` and ``validate`` render ``text|json`` only, ``audit`` adds
+``sarif`` — unsupported values are rejected by argparse ``choices``
+before any work happens)
 and can persist it with ``--output PATH``; ``sweep``, ``advise`` and
 ``compare`` additionally drop an artifact under ``results/cli/`` unless
 told not to, and cache the collected counters under ``results/cache/``
 (``--no-cache`` opts out) so a repeated run skips collection and goes
-straight to the columnar batch model evaluation.
+straight to the columnar batch model evaluation.  ``audit`` artifacts
+(report + the scanned HLO dumps its SARIF locations point into) land
+under ``results/cli/audit/``.
 The CLI builds ordinary ``WorkloadSpec``s and calls the same Session
 methods the Python API exposes, so its numbers are bit-identical to a
 scripted run.
@@ -320,6 +325,73 @@ def cmd_compare(args) -> int:
     return 0
 
 
+def cmd_audit(args) -> int:
+    """Static contention lint over compiled HLO — zero kernel executions.
+
+    Targets: ``--config NAME`` lowers each applicable step of one zoo
+    config to its pre-optimization HLO (no ``.compile()``), ``--all``
+    audits the whole zoo, ``--hlo-file PATH`` audits an already-dumped
+    module without importing jax.  The scanned HLO is dumped under
+    ``results/cli/audit/hlo/`` so SARIF result locations point at real,
+    openable artifacts; ``--fail-on SEVERITY`` turns findings at or
+    above that severity into exit code 1 (the CI gate).
+    """
+    from repro import audit as audit_mod
+
+    sess = Session(args.device, cache_dir=args.cache_dir)
+    audit_dir = results_dir() / "cli" / "audit"
+    dump_hlo = not args.no_artifact
+
+    def sink_for(config: str):
+        def sink(step: str, text: str) -> str:
+            rel = f"hlo/{config.replace('-', '_')}__{step}.hlo"
+            if dump_hlo:
+                path = audit_dir / rel
+                path.parent.mkdir(parents=True, exist_ok=True)
+                path.write_text(text)
+            # SARIF artifact URIs are relative to the report's directory
+            return rel
+        return sink
+
+    if args.hlo_file:
+        text = Path(args.hlo_file).read_text()
+        label = Path(args.hlo_file).stem
+        report = audit_mod.audit_hlo(
+            text, session=sess, label=label,
+            suppress=args.suppress or (), hlo_uri=args.hlo_file,
+            num_cores=args.num_cores)
+    else:
+        from repro.audit import zoo
+        if args.all:
+            configs = sorted(zoo.ARCHS)
+        elif args.config:
+            configs = [zoo.normalize_arch(c) for c in args.config]
+        else:
+            raise ValueError(
+                "audit needs a target: --config NAME, --all, or "
+                "--hlo-file PATH")
+        reports = []
+        for config in configs:
+            reports.append(audit_mod.audit_config(
+                config, session=sess, steps=args.steps,
+                reduced=args.reduced, variant=args.variant,
+                extra_suppress=args.suppress or (),
+                hlo_sink=sink_for(config), num_cores=args.num_cores))
+        report = (reports[0] if len(reports) == 1
+                  else audit_mod.merge(reports))
+
+    ext = {"text": "txt", "json": "json", "csv": "csv",
+           "sarif": "sarif"}[args.format]
+    _emit(report.render(args.format), args,
+          default_artifact=f"audit/audit-{report.label}.{ext}")
+    rc = audit_mod.exit_code(report, args.fail_on)
+    if rc:
+        gated = report.gated(args.fail_on)
+        print(f"audit: {len(gated)} finding(s) at or above "
+              f"--fail-on {args.fail_on}", file=sys.stderr)
+    return rc
+
+
 # -- parser ------------------------------------------------------------------
 
 
@@ -475,6 +547,43 @@ def build_parser() -> argparse.ArgumentParser:
                    help="do not read/write the results/cache/ counter "
                         "cache (re-collect every point)")
     p.set_defaults(func=cmd_compare)
+
+    p = sub.add_parser(
+        "audit",
+        help="static HLO contention lint over the model zoo (SARIF, "
+             "CI gate)")
+    _add_common(p, formats=("text", "json", "csv", "sarif"))
+    p.add_argument("--config", nargs="+", default=None, metavar="NAME",
+                   help="zoo config(s) to lower and audit (underscore or "
+                        "dash spelling)")
+    p.add_argument("--all", action="store_true",
+                   help="audit every zoo config")
+    p.add_argument("--hlo-file", default=None, metavar="PATH",
+                   help="audit an already-dumped HLO module text instead "
+                        "of lowering a config (no jax import)")
+    p.add_argument("--steps", nargs="+", default=None,
+                   choices=("train", "prefill", "decode"),
+                   help="steps to lower per config (default: all "
+                        "applicable)")
+    p.add_argument("--reduced", action="store_true",
+                   help="lower reduced configs on smoke shapes (fast; "
+                        "same scatter idioms)")
+    p.add_argument("--variant", default="base",
+                   help="optimization variant for shape tuning "
+                        "(default base)")
+    p.add_argument("--fail-on", default="error",
+                   choices=("never", "note", "warning", "error"),
+                   help="exit 1 when any non-suppressed finding is at or "
+                        "above this severity (default error)")
+    p.add_argument("--suppress", nargs="+", default=None, metavar="RULE",
+                   help="suppress rule ids (adds to config # repro: noqa)")
+    p.add_argument("--num-cores", type=int, default=8,
+                   help="cores the synthesized streams are scored on "
+                        "(default 8)")
+    p.add_argument("--no-artifact", action="store_true",
+                   help="do not write the report/HLO artifacts under "
+                        "results/cli/audit/")
+    p.set_defaults(func=cmd_audit)
 
     return ap
 

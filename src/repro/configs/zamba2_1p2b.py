@@ -2,6 +2,12 @@
 every 6 layers (shared weights, per-invocation KV)."""
 from repro.configs.base import ModelConfig
 
+# The Mamba2 conv-state ring buffers dominate this config's scan as
+# stride-aligned dynamic-update-slice writes, but each slot has exactly
+# one producer per step (overwrite, no read-modify-write), so the bank
+# hazard is benign here.
+# repro: noqa BANK001
+
 CONFIG = ModelConfig(
     name="zamba2-1.2b", family="hybrid",
     num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32, head_dim=64,

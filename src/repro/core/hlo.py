@@ -40,10 +40,21 @@ _COLLECTIVES = (
     "collective-permute", "collective-broadcast", "ragged-all-to-all",
 )
 
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# Dims may carry dynamic-size markers (`s32[<=16]`); tuples may nest one
+# level and carry layout annotations on elements and on the tuple itself:
+# `(f32[8,128]{1,0}, s32[])` or `((f32[2], s32[]), f32[4]{0})`.
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,<=]*)\]")
+_ARRAY_SHAPE_PAT = r"[a-z0-9]+\[[0-9,<=]*\](?:\{[^}]*\})?"
+_TUPLE_SHAPE_PAT = r"\((?:[^()]|\([^()]*\))*\)(?:\{[^}]*\})?"
 _INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    rf"({_TUPLE_SHAPE_PAT}|{_ARRAY_SHAPE_PAT})\s+"
     r"([\w\-]+)\(")
+
+
+def _dim_int(d: str) -> int:
+    """Parse one dim token, tolerating dynamic-size markers (`<=16`)."""
+    return int(d.lstrip("<="))
 _IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 
@@ -57,7 +68,7 @@ def shape_bytes(shape_text: str) -> int:
         n = 1
         if dims:
             for d in dims.split(","):
-                n *= int(d)
+                n *= _dim_int(d)
         total += n * _DTYPE_BYTES[dtype]
     return total
 
@@ -189,6 +200,9 @@ def _parse_group_size(line: str, num_devices: int) -> int:
 # HBM-traffic model.  Collective operand bytes get the same multipliers.
 
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+# Pre-optimization dumps (`lowered.compiler_ir("hlo").as_hlo_text()`) print
+# computation headers without signatures: `region_9.143 {` / `ENTRY main.847 {`.
+_COMP_BARE_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\{\s*$")
 _CALLED_RE = re.compile(
     r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
@@ -231,7 +245,8 @@ def _parse_computations(text: str) -> dict[str, list[_Instr]]:
     cur: Optional[str] = None
     for line in text.splitlines():
         if cur is None:
-            m = _COMP_RE.match(line.strip())
+            s = line.strip()
+            m = _COMP_RE.match(s) or _COMP_BARE_RE.match(s)
             if m and line.rstrip().endswith("{"):
                 cur = m.group(1)
                 comps[cur] = []
@@ -262,8 +277,42 @@ def _operand_section(line: str, opcode: str) -> str:
 
 
 def _shape_dims(shape_text: str) -> list[tuple[str, list[int]]]:
-    return [(dt, [int(d) for d in dims.split(",")] if dims else [])
+    return [(dt, [_dim_int(d) for d in dims.split(",")] if dims else [])
             for dt, dims in _SHAPE_RE.findall(shape_text)]
+
+
+def called_computations(line: str) -> list[str]:
+    """Names of computations referenced by calls/to_apply/body/... attrs."""
+    out = []
+    for m in _CALLED_RE.finditer(line):
+        for name in m.group(1).split(","):
+            out.append(name.strip().lstrip("%"))
+    return out
+
+
+def resolve_trip_count(comps: dict[str, list["_Instr"]], while_line: str,
+                       cond_name: Optional[str]) -> Optional[int]:
+    """Trip count of a `while` op: frontend `known_trip_count` metadata if
+    present, else the loop-bound constant found in the condition
+    computation (possibly fusion-wrapped). None if unresolvable."""
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return int(m.group(1))
+    if cond_name is None:
+        return None
+    seen, frontier = set(), [cond_name]
+    while frontier:
+        c = frontier.pop()
+        if c in seen:
+            continue
+        seen.add(c)
+        for ins in comps.get(c, []):
+            if ins.opcode == "constant":
+                m = _CONST_CMP_RE.search(ins.line)
+                if m:
+                    return int(m.group(1))
+            frontier.extend(called_computations(ins.line))
+    return None
 
 
 @dataclasses.dataclass
@@ -318,7 +367,7 @@ class HloCostModel:
         for line in text.splitlines():
             s = line.strip()
             if s.startswith("ENTRY"):
-                m = _COMP_RE.match(s)
+                m = _COMP_RE.match(s) or _COMP_BARE_RE.match(s)
                 if m:
                     return m.group(1)
         return None
@@ -332,25 +381,7 @@ class HloCostModel:
 
     def _trip_count(self, while_line: str, cond_name: Optional[str]
                     ) -> Optional[int]:
-        m = _TRIP_RE.search(while_line)
-        if m:
-            return int(m.group(1))
-        if cond_name is None:
-            return None
-        # fallback: constant in the condition (possibly fusion-wrapped)
-        seen, frontier = set(), [cond_name]
-        while frontier:
-            c = frontier.pop()
-            if c in seen:
-                continue
-            seen.add(c)
-            for ins in self.comps.get(c, []):
-                if ins.opcode == "constant":
-                    m = _CONST_CMP_RE.search(ins.line)
-                    if m:
-                        return int(m.group(1))
-                frontier.extend(self._called(ins))
-        return None
+        return resolve_trip_count(self.comps, while_line, cond_name)
 
     def _flops_only(self, comp: str) -> float:
         """Arithmetic inside a fused computation (bytes stay at boundary)."""
@@ -364,11 +395,7 @@ class HloCostModel:
         return total
 
     def _called(self, ins: _Instr) -> list[str]:
-        out = []
-        for m in _CALLED_RE.finditer(ins.line):
-            for name in m.group(1).split(","):
-                out.append(name.strip().lstrip("%"))
-        return out
+        return called_computations(ins.line)
 
     def _instr_flops(self, ins: _Instr, comp: str) -> float:
         op = ins.opcode
@@ -548,6 +575,23 @@ class HloCostModel:
 
 def analyze_module(text: str, num_devices: int) -> ModuleCost:
     return HloCostModel(text, num_devices).analyze()
+
+
+# Public aliases for the instruction-graph walk (used by `repro.audit`).
+def parse_computations(text: str) -> dict[str, list[_Instr]]:
+    return _parse_computations(text)
+
+
+def operand_section(line: str, opcode: str) -> str:
+    return _operand_section(line, opcode)
+
+
+def shape_dims(shape_text: str) -> list[tuple[str, list[int]]]:
+    return _shape_dims(shape_text)
+
+
+def find_entry(text: str) -> Optional[str]:
+    return HloCostModel._find_entry(text)
 
 
 # ---------------------------------------------------------------------------

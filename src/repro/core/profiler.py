@@ -199,7 +199,8 @@ def profile_counters(
         params={"bytes_read": cset.bytes_read, "flops": cset.flops,
                 "overhead_cycles": cset.overhead_cycles,
                 "use_true_n": use_true_n, "source": cset.source,
-                "wall_time_s": cset.wall_time_s},
+                "wall_time_s": cset.wall_time_s,
+                "meta": dict(cset.meta)},
     )
 
 
@@ -313,7 +314,8 @@ def profile_batch(
                     "flops": float(frame.flops[i]),
                     "overhead_cycles": float(frame.overhead_cycles[i]),
                     "use_true_n": use_true_n, "source": frame.sources[i],
-                    "wall_time_s": frame.wall_time_s[i]},
+                    "wall_time_s": frame.wall_time_s[i],
+                    "meta": dict(frame.meta[i] or {})},
         ))
     return profiles
 

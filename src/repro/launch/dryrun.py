@@ -17,60 +17,19 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
 
-import jax
-
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
 from repro.core import hlo as hlo_mod
 from repro.core import roofline
-from repro.launch import specs as specs_mod
-from repro.launch.mesh import data_axes_of, make_production_mesh, mesh_chips
-from repro.models.registry import build_model
-from repro.optim import adamw
-from repro.parallel import ctx as pctx
-from repro.serve import step as serve_mod
-from repro.train import step as train_mod
+from repro.launch.lowering import (OPTIMIZATIONS, build_lowered,  # noqa: F401
+                                   shape_tuned_config)
+from repro.launch.mesh import make_production_mesh, mesh_chips
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
-
-
-# ---------------------------------------------------------------------------
-# §Perf hillclimb variants: per (arch, shape) config overrides, applied on
-# top of the baseline.  Keys match EXPERIMENTS.md §Perf iteration ids.
-# ---------------------------------------------------------------------------
-OPTIMIZATIONS: dict[tuple[str, str], dict] = {
-    ("command-r-plus-104b", "train_4k"): dict(
-        attn_tp_expand=True, train_constrain_grad_sharding=True,
-        attn_bf16_score_grad=True),
-    ("gemma2-27b", "train_4k"): dict(
-        attn_tp_expand=True, train_constrain_grad_sharding=True,
-        attn_bf16_score_grad=True),
-    ("qwen3-moe-235b-a22b", "train_4k"): dict(
-        attn_tp_expand=True, train_constrain_grad_sharding=True,
-        moe_bf16_combine=True),
-}
-
-
-def shape_tuned_config(cfg, shape, variant: str = "base"):
-    """Per-shape impl knobs (documented in EXPERIMENTS.md §Dry-run)."""
-    kw = {}
-    if shape.kind == "prefill" and shape.seq_len >= 32768 \
-            and not cfg.rwkv and cfg.family != "ssm":
-        kw["attn_impl"] = "blockwise"
-        kw["kv_block"] = 1024
-    if cfg.vocab_size >= 100_000 and shape.kind == "train":
-        kw["loss_chunk"] = 455  # divides 4095; keeps f32 logits ~0.5 GiB/dev
-    if variant == "opt":
-        kw.update(OPTIMIZATIONS.get((cfg.name, shape.name), {}))
-    loss_chunk = kw.pop("loss_chunk", 0)
-    train_kw = {k[len("train_"):]: kw.pop(k) for k in list(kw)
-                if k.startswith("train_")}
-    return dataclasses.replace(cfg, **kw) if kw else cfg, loss_chunk, train_kw
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -85,8 +44,6 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     cfg, loss_chunk, train_kw = shape_tuned_config(cfg0, shape, variant)
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh_chips(mesh)
-    daxes = data_axes_of(mesh)
-    model = build_model(cfg)
     mesh_name = "pod2" if multi_pod else "single"
     tokens_per_step = shape.global_batch * (
         shape.seq_len if shape.kind != "decode" else 1)
@@ -98,47 +55,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         model_flops = 2.0 * n_active * tokens_per_step
 
     t0 = time.time()
-    with pctx.use_mesh(mesh, data_axes=daxes, tp_axis="model"):
-        if shape.kind == "train":
-            num_data = 1
-            for a in daxes:
-                num_data *= mesh.shape[a]
-            accum = max(1, shape.global_batch // num_data)
-            tcfg = train_mod.TrainConfig(accum_steps=accum,
-                                         loss_chunk=loss_chunk, **train_kw)
-            ocfg = adamw.AdamWConfig()
-            step_fn = train_mod.make_train_step(model, tcfg, ocfg)
-            state_sds, state_sh = specs_mod.state_specs(model, mesh)
-            batch = specs_mod.train_batch_specs(cfg, shape, mesh)
-            lowered = jax.jit(
-                step_fn,
-                in_shardings=(state_sh,
-                              jax.tree.map(lambda s: s.sharding, batch)),
-                donate_argnums=(0,),
-            ).lower(state_sds, batch)
-        elif shape.kind == "prefill":
-            scfg = serve_mod.ServeConfig(max_len=shape.seq_len)
-            prefill = serve_mod.make_prefill(model, scfg)
-            params_sds, params_sh = specs_mod.param_specs(model, mesh)
-            inputs = specs_mod.prefill_specs(cfg, shape, mesh)
-            tokens = inputs.pop("tokens")
-            extras = inputs or None
-            lowered = jax.jit(
-                prefill, in_shardings=(params_sh, tokens.sharding, None),
-                static_argnums=(),
-            ).lower(params_sds, tokens, extras)
-        else:  # decode
-            decode = serve_mod.make_decode_step(model)
-            params_sds, params_sh = specs_mod.param_specs(model, mesh)
-            cache_sds, cache_sh, tokens, pos = specs_mod.decode_specs(
-                cfg, shape, model, mesh, params_sds)
-            lowered = jax.jit(
-                decode,
-                in_shardings=(params_sh, cache_sh, tokens.sharding,
-                              pos.sharding),
-                donate_argnums=(1,),
-            ).lower(params_sds, cache_sds, tokens, pos)
-        compiled = lowered.compile()
+    lowered = build_lowered(cfg, shape, mesh, loss_chunk=loss_chunk,
+                            train_kw=train_kw)
+    compiled = lowered.compile()
     compile_s = time.time() - t0
 
     mem = hlo_mod.memory_analysis_dict(compiled)

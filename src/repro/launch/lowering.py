@@ -1,0 +1,123 @@
+"""Shared step-lowering helpers for the dry-run grid and the static audit.
+
+``build_lowered`` packages the (config x shape) -> jitted-step -> ``.lower()``
+plumbing that used to live inline in ``launch/dryrun.py``: build the
+train / prefill / decode step for a shape kind, wire the ShapeDtypeStruct
+inputs and shardings from ``launch/specs.py``, and lower under the given
+mesh.  The dry-run grid compiles the result; ``repro.audit`` stops at the
+*pre-optimization* HLO, where ``scatter`` / ``dynamic-update-slice`` idioms
+are still visible (post-optimization CPU HLO rewrites scatters into
+``while`` loops).
+
+Unlike ``dryrun``, importing this module does NOT mutate ``XLA_FLAGS``:
+pre-optimization HLO is pre-SPMD (global shapes), so audits run on a tiny
+mesh with no host-device-count override.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import data_axes_of
+from repro.models.registry import build_model
+from repro.optim import adamw
+from repro.parallel import ctx as pctx
+from repro.serve import step as serve_mod
+from repro.train import step as train_mod
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb variants: per (arch, shape) config overrides, applied on
+# top of the baseline.  Keys match EXPERIMENTS.md §Perf iteration ids.
+# ---------------------------------------------------------------------------
+OPTIMIZATIONS: dict[tuple[str, str], dict] = {
+    ("command-r-plus-104b", "train_4k"): dict(
+        attn_tp_expand=True, train_constrain_grad_sharding=True,
+        attn_bf16_score_grad=True),
+    ("gemma2-27b", "train_4k"): dict(
+        attn_tp_expand=True, train_constrain_grad_sharding=True,
+        attn_bf16_score_grad=True),
+    ("qwen3-moe-235b-a22b", "train_4k"): dict(
+        attn_tp_expand=True, train_constrain_grad_sharding=True,
+        moe_bf16_combine=True),
+}
+
+
+def shape_tuned_config(cfg, shape, variant: str = "base"):
+    """Per-shape impl knobs (documented in EXPERIMENTS.md §Dry-run)."""
+    kw = {}
+    if shape.kind == "prefill" and shape.seq_len >= 32768 \
+            and not cfg.rwkv and cfg.family != "ssm":
+        kw["attn_impl"] = "blockwise"
+        kw["kv_block"] = 1024
+    if cfg.vocab_size >= 100_000 and shape.kind == "train":
+        kw["loss_chunk"] = 455  # divides 4095; keeps f32 logits ~0.5 GiB/dev
+    if variant == "opt":
+        kw.update(OPTIMIZATIONS.get((cfg.name, shape.name), {}))
+    loss_chunk = kw.pop("loss_chunk", 0)
+    train_kw = {k[len("train_"):]: kw.pop(k) for k in list(kw)
+                if k.startswith("train_")}
+    return dataclasses.replace(cfg, **kw) if kw else cfg, loss_chunk, train_kw
+
+
+def build_lowered(cfg, shape, mesh, *, loss_chunk: int = 0,
+                  train_kw: dict | None = None):
+    """Lower the step for ``shape.kind`` under ``mesh``; returns jax Lowered.
+
+    ``cfg`` must already carry any shape-tuned overrides (see
+    ``shape_tuned_config``).
+    """
+    daxes = data_axes_of(mesh)
+    model = build_model(cfg)
+    with pctx.use_mesh(mesh, data_axes=daxes, tp_axis="model"):
+        if shape.kind == "train":
+            num_data = 1
+            for a in daxes:
+                num_data *= mesh.shape[a]
+            accum = max(1, shape.global_batch // num_data)
+            tcfg = train_mod.TrainConfig(accum_steps=accum,
+                                         loss_chunk=loss_chunk,
+                                         **(train_kw or {}))
+            ocfg = adamw.AdamWConfig()
+            step_fn = train_mod.make_train_step(model, tcfg, ocfg)
+            state_sds, state_sh = specs_mod.state_specs(model, mesh)
+            batch = specs_mod.train_batch_specs(cfg, shape, mesh)
+            return jax.jit(
+                step_fn,
+                in_shardings=(state_sh,
+                              jax.tree.map(lambda s: s.sharding, batch)),
+                donate_argnums=(0,),
+            ).lower(state_sds, batch)
+        if shape.kind == "prefill":
+            scfg = serve_mod.ServeConfig(max_len=shape.seq_len)
+            prefill = serve_mod.make_prefill(model, scfg)
+            params_sds, params_sh = specs_mod.param_specs(model, mesh)
+            inputs = specs_mod.prefill_specs(cfg, shape, mesh)
+            tokens = inputs.pop("tokens")
+            extras = inputs or None
+            return jax.jit(
+                prefill, in_shardings=(params_sh, tokens.sharding, None),
+                static_argnums=(),
+            ).lower(params_sds, tokens, extras)
+        # decode
+        decode = serve_mod.make_decode_step(model)
+        params_sds, params_sh = specs_mod.param_specs(model, mesh)
+        cache_sds, cache_sh, tokens, pos = specs_mod.decode_specs(
+            cfg, shape, model, mesh, params_sds)
+        return jax.jit(
+            decode,
+            in_shardings=(params_sh, cache_sh, tokens.sharding, pos.sharding),
+            donate_argnums=(1,),
+        ).lower(params_sds, cache_sds, tokens, pos)
+
+
+def pre_optimization_hlo(lowered) -> str:
+    """Pre-optimization HLO text of a jax Lowered (scatters intact)."""
+    try:
+        ir = lowered.compiler_ir(dialect="hlo")
+        return ir.as_hlo_text()
+    except Exception:
+        # Older/newer jax: fall back to whatever textual IR is available.
+        return lowered.as_text()

@@ -1,0 +1,48 @@
+"""Regenerate the golden pre-optimization HLO dumps used by the tests.
+
+The goldens are real ``repro.audit.zoo`` lowerings of two reduced
+configs (the same smoke geometry ``audit --reduced`` uses), gzipped to
+keep the repo small:
+
+    granite_moe_1b_a400m__decode.hlo.gz   MoE decode: dispatch scatter,
+                                          expert-count histogram, argsort
+                                          routing, KV-cache DUS writes
+    whisper_small__train.hlo.gz           encoder-decoder train: heavy
+                                          DUS traffic, tuple-shaped
+                                          while carries
+
+Run from the repo root after an intentional lowering change:
+
+    PYTHONPATH=src python tests/data/regen_hlo_goldens.py
+"""
+import gzip
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[2] / "src"))
+
+from repro.audit import zoo  # noqa: E402
+
+HERE = pathlib.Path(__file__).resolve().parent
+GOLDENS = {
+    "granite_moe_1b_a400m__decode.hlo.gz": ("granite-moe-1b-a400m",
+                                            "decode"),
+    "whisper_small__train.hlo.gz": ("whisper-small", "train"),
+}
+
+
+def main() -> int:
+    for fname, (arch, step) in GOLDENS.items():
+        text = zoo.lower_config_steps(arch, steps=[step],
+                                      reduced=True)[step]
+        path = HERE / fname
+        # mtime=0 keeps the archive byte-stable across regenerations
+        with gzip.GzipFile(path, "wb", mtime=0) as fh:
+            fh.write(text.encode())
+        print(f"wrote {path} ({path.stat().st_size} bytes, "
+              f"{len(text)} chars)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

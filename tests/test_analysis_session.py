@@ -417,3 +417,62 @@ def test_core_namespace_forwards_session_with_warning():
         assert core.Device is Device
     with pytest.raises(AttributeError):
         core.not_a_real_name
+
+
+# -- HLO provider meta surfaces in reports (unresolved loops, collectives) ----
+
+_META_HLO = """\
+HloModule meta_demo
+
+cond {
+  p = (s32[], s32[]) parameter(0)
+  i = s32[] get-tuple-element(p), index=0
+  n = s32[] get-tuple-element(p), index=1
+  ROOT lt = pred[] compare(i, n), direction=LT
+}
+
+body {
+  p = (s32[], s32[]) parameter(0)
+  i = s32[] get-tuple-element(p), index=0
+  n = s32[] get-tuple-element(p), index=1
+  one = s32[] constant(1)
+  i2 = s32[] add(i, one)
+  ROOT t = (s32[], s32[]) tuple(i2, n)
+}
+
+ENTRY main {
+  a = s32[] parameter(0)
+  n = s32[] parameter(1)
+  x = f32[8,8]{1,0} parameter(2)
+  ar = f32[8,8]{1,0} all-reduce(x), replica_groups=[2,4]<=[8], to_apply=body
+  t0 = (s32[], s32[]) tuple(a, n)
+  ROOT w = (s32[], s32[]) while(t0), condition=cond, body=body
+}
+"""
+
+
+def test_report_surfaces_hlo_meta_footers(tmp_path):
+    """A dynamically-bounded while + an all-reduce: the provider's meta
+    (unresolved_loops, collectives) must reach the text footer and the
+    json payload of Session.report."""
+    sess = Session("v5e", provider="hlo", cache_dir=tmp_path)
+    spec = WorkloadSpec.from_compiled(hlo_text=_META_HLO, label="meta-demo",
+                                      num_devices=8)
+    sess.profile(spec)
+    text = sess.report("text")
+    assert "hlo meta [meta-demo]:" in text
+    assert "unresolved loop trip count" in text
+    assert "lower bounds" in text
+    assert "collective op(s)" in text
+
+    payload = json.loads(sess.report("json"))
+    meta = payload["meta"]["meta-demo"]
+    assert meta["unresolved_loops"] >= 1
+    assert "all-reduce" in meta["collectives"]
+
+
+def test_report_no_meta_footer_for_trace_sources(sess):
+    spec = WorkloadSpec.from_indices(_uniform(), 256, label="plain")
+    sess.profile(spec)
+    assert "hlo meta" not in sess.report("text")
+    assert "meta" not in json.loads(sess.report("json"))

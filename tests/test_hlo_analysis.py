@@ -48,6 +48,64 @@ def test_shape_bytes():
     assert hlo.shape_bytes("token[]") == 0
 
 
+def test_shape_bytes_tuples_with_layouts():
+    # tuple elements carrying layout annotations (real dump syntax)
+    assert hlo.shape_bytes("(f32[8,128]{1,0}, s32[])") == 8 * 128 * 4 + 4
+    # one level of tuple nesting
+    assert hlo.shape_bytes("((f32[8,128]{1,0}, s32[]), f32[4]{0})") \
+        == 8 * 128 * 4 + 4 + 16
+    # bounded dynamic dimensions count their bound
+    assert hlo.shape_bytes("s32[<=16]") == 64
+    assert hlo.shape_bytes("s32[<=16]{0}") == 64
+
+
+def test_instr_re_tuple_results():
+    m = hlo._INSTR_RE.match(
+        "  while.1 = (f32[8,128]{1,0}, s32[]) while(tuple.0), "
+        "condition=cond, body=body")
+    assert m is not None
+    name, shape, opcode = m.group(1), m.group(2), m.group(3)
+    assert (name, shape, opcode) \
+        == ("while.1", "(f32[8,128]{1,0}, s32[])", "while")
+    m = hlo._INSTR_RE.match(
+        "  t = ((f32[8,128]{1,0}, s32[]), f32[4]{0}) tuple(a, b, c)")
+    assert m is not None and m.group(3) == "tuple"
+    m = hlo._INSTR_RE.match("  d = s32[<=16]{0} add(a, b)")
+    assert m is not None and m.group(2) == "s32[<=16]{0}"
+
+
+def _golden(name):
+    import gzip
+    import pathlib
+    path = pathlib.Path(__file__).parent / "data" / name
+    return gzip.decompress(path.read_bytes()).decode()
+
+
+def test_parse_golden_granite_decode():
+    """Real pre-optimization dump: bare computation headers, tuple-shaped
+    while carries, no layout-free signatures."""
+    text = _golden("granite_moe_1b_a400m__decode.hlo.gz")
+    comps = hlo.parse_computations(text)
+    assert len(comps) > 20
+    entry = hlo.find_entry(text)
+    assert entry is not None
+    # tuple-result instructions must be walked, not skipped
+    tuple_instrs = [i for c in comps.values() for i in c
+                    if i.result.startswith("(")]
+    assert tuple_instrs
+    mc = hlo.analyze_module(text, 1)
+    assert mc.unresolved_loops == 0
+
+
+def test_parse_golden_whisper_train():
+    text = _golden("whisper_small__train.hlo.gz")
+    comps = hlo.parse_computations(text)
+    assert len(comps) > 50
+    assert hlo.find_entry(text) is not None
+    n_instr = sum(len(c) for c in comps.values())
+    assert n_instr > 2000
+
+
 def test_ring_wire_model():
     rw = hlo.CollectiveOp.ring_wire_bytes
     assert rw("all-gather", 100, 4) == 300
