@@ -8,6 +8,10 @@ Prints ``name,us_per_call,derived`` CSV rows (spec format):
   * fig5_reorder_speedup      — hist2-vs-hist predicted speedup (paper Fig 5)
   * sec5_model_vs_measured    — trace-vs-kernel provider counter validation
                                 (paper §5) + acquisition-cost asymmetry
+  * lint_static_vs_trace      — symbolic static counter derivation vs
+                                TraceProvider synthesis on the §5
+                                hist/hist2 kernels (bit-for-bit equal,
+                                zero kernel executions)
   * moe_dispatch_profile      — router balance -> scatter-unit utilization
                                 (framework integration of the model)
   * sweep_grid_parallel       — grid-sweep engine: serial vs concurrent
@@ -174,6 +178,50 @@ def sec5_model_vs_measured() -> None:
          f"max_rel_err={report.max_rel_err:.4f};"
          f"trace_us={us_trace:.0f};kernel_us={us_kernel:.0f};"
          f"speedup={us_kernel / max(us_trace, 1e-9):.1f}x")
+
+
+def lint_static_vs_trace() -> None:
+    """Static lint derivation vs dynamic trace synthesis (§5 kernels).
+
+    ``repro.lint`` proves the hist/hist2 index streams affine and
+    derives their counters symbolically; this row pins the bit-for-bit
+    equality with ``TraceProvider`` and compares acquisition cost.  The
+    one-time jaxpr trace (``target_from_spec`` + ``analyze_target``) is
+    reported separately from the steady-state derivation, which reuses
+    the traced model the way ``lint_registry`` does.
+    """
+    from repro.analysis.providers.trace import TraceProvider
+    from repro.lint.analysis import (analyze_target, derive_counters,
+                                     target_from_spec)
+
+    dev = session().device
+    provider = TraceProvider()
+    for variant in ("hist", "hist2"):
+        img = make_image("solid", 1 << 15)
+        spec = WorkloadSpec.from_histogram(
+            img, label=f"{variant}-solid", variant=variant,
+            waves_per_tile=8, overhead_cycles=2500.0)
+        target = target_from_spec(spec)
+        t0 = time.perf_counter()
+        models = analyze_target(target)
+        us_trace_jaxpr = (time.perf_counter() - t0) * 1e6
+        model = next(m for m in models if m.sites)
+        derived, deriv = derive_counters(spec, target=target, model=model)
+        assert deriv.is_static
+        us_static = _timeit(
+            lambda: derive_counters(spec, target=target, model=model))
+        us_dynamic = _timeit(lambda: provider.collect(spec, dev))
+        expected = provider.collect(spec, dev)
+        for field, b in vars(expected).items():
+            a = getattr(derived, field)
+            if isinstance(a, np.ndarray):
+                assert a.dtype == b.dtype and np.array_equal(a, b), field
+            else:
+                assert a == b, field
+        emit(f"lint_static_vs_trace_{variant}", us_static,
+             f"bitwise_equal=1;trace_jaxpr_us={us_trace_jaxpr:.0f};"
+             f"static_us={us_static:.0f};dynamic_us={us_dynamic:.0f};"
+             f"speedup={us_dynamic / max(us_static, 1e-9):.2f}x")
 
 
 def sweep_grid_parallel() -> None:
@@ -401,9 +449,9 @@ def roofline_table() -> None:
 
 
 ALL = [fig1_service_time_table, fig3_utilization_sweep, fig4_popc_vs_fao,
-       fig5_reorder_speedup, sec5_model_vs_measured, moe_dispatch_profile,
-       sweep_grid_parallel, profile_batch_vs_loop, advise_search,
-       kernel_walltime, roofline_table]
+       fig5_reorder_speedup, sec5_model_vs_measured, lint_static_vs_trace,
+       moe_dispatch_profile, sweep_grid_parallel, profile_batch_vs_loop,
+       advise_search, kernel_walltime, roofline_table]
 
 
 def main() -> None:

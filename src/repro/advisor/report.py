@@ -57,6 +57,19 @@ class Candidate:
                 out[f"param_{k}"] = v
         return out
 
+    def summary(self) -> dict:
+        """Compact dict of the candidate — what audit/lint findings
+        attach as ``Finding.advice`` (and SARIF ``properties.advise``)."""
+        prof = self.profile
+        return {
+            "transforms": "+".join(self.names),
+            "families": "+".join(self.families),
+            "predicted_speedup": round(float(self.speedup), 4),
+            "predicted_bottleneck": prof.bottleneck if prof else "",
+            "predicted_scatter_U": round(
+                float(prof.scatter_utilization), 4) if prof else 0.0,
+        }
+
 
 @dataclasses.dataclass
 class AdvisorReport:

@@ -374,6 +374,26 @@ class Session:
                             rules=rules, suppress=suppress,
                             num_cores=num_cores)
 
+    def lint(self, kernels: Optional[Sequence[str]] = None, *,
+             suppress: Sequence[str] = (),
+             num_cores: Optional[int] = None):
+        """Symbolic jaxpr-level lint of registered Pallas kernels.
+
+        One level below ``audit``: traces each kernel (or a
+        ``WorkloadSpec`` passed in place of a name) to its jaxpr, walks
+        it for scatter/accumulate sites, and — where the index stream
+        is statically derivable — proves the exact degree distribution
+        with zero kernel executions, scoring findings through the same
+        columnar model pass the audit uses.  Returns an
+        ``AuditReport`` carrying KERN001–KERN005 findings.
+        """
+        from repro.lint import lint_registry, lint_spec  # lazy layer
+        if kernels is not None and not isinstance(kernels, (list, tuple)):
+            return lint_spec(kernels, session=self, suppress=suppress,
+                             num_cores=num_cores)
+        return lint_registry(kernels, session=self, suppress=suppress,
+                             num_cores=num_cores)
+
     def speedup(self, before: WorkloadSpec, after: WorkloadSpec) -> float:
         """Predicted speedup of ``after`` over ``before``.
 

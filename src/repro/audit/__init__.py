@@ -23,14 +23,16 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 from repro.audit import rules as rules_mod
-from repro.audit.report import AuditReport, exit_code, merge, parse_noqa
+from repro.audit.report import (AuditReport, exit_code, merge, merge_sarif,
+                                parse_noqa)
 from repro.audit.rules import CATALOG, Finding, Rule
 from repro.audit.scanner import AtomicSite, ScanResult, scan_hlo
 
 __all__ = [
     "AtomicSite", "AuditReport", "CATALOG", "Finding", "Rule",
-    "ScanResult", "audit_config", "audit_hlo", "audit_source",
-    "exit_code", "merge", "parse_noqa", "scan_hlo",
+    "ScanResult", "attach_advice", "audit_config", "audit_hlo",
+    "audit_source", "exit_code", "merge", "merge_sarif", "parse_noqa",
+    "scan_hlo",
 ]
 
 
@@ -64,6 +66,43 @@ def audit_hlo(text: str, *, session=None, label: str = "module",
         label=label, device=_device_name(session), findings=findings,
         steps=[label], sites_scanned=len(scan.sites),
         instructions_scanned=scan.num_instructions)
+
+
+def attach_advice(report: AuditReport, session=None, *, depth: int = 2,
+                  beam_width: int = 8, top_k: int = 3,
+                  min_severity: str = "warning") -> AuditReport:
+    """Run ``Session.advise`` on gating findings; attach the top transform.
+
+    The ROADMAP's "audit findings -> advised scenarios" play: every
+    non-suppressed finding at or above ``min_severity`` that carries a
+    candidate ``WorkloadSpec`` gets the advisor's best-ranked transform
+    composition (predicted speedup + post-transform bottleneck) as
+    ``Finding.advice`` — rendered into SARIF ``properties.advise`` and
+    the text report.  Specs are deduplicated by fingerprint so one
+    advisor search serves every finding that shares a workload.
+    """
+    if session is None:
+        session = _make_session()
+    gate = rules_mod.SEVERITIES.index(min_severity)
+    cache: dict = {}
+    updated = []
+    for f in report.findings:
+        if (f.suppressed or f.spec is None or f.gate_rank() < gate
+                or f.advice is not None):
+            updated.append(f)
+            continue
+        key = f.spec.fingerprint()
+        if key not in cache:
+            adv = session.advise(f.spec, depth=depth,
+                                 beam_width=beam_width, top_k=top_k)
+            cache[key] = adv.best.summary() if adv.best else None
+        if cache[key] is None:
+            updated.append(f)
+            continue
+        import dataclasses
+        updated.append(dataclasses.replace(f, advice=dict(cache[key])))
+    report.findings = updated
+    return report
 
 
 def _source_text(source) -> str:

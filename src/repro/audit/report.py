@@ -137,6 +137,12 @@ class AuditReport:
             lines.append(f"        {f.message}")
             if f.fixit:
                 lines.append(f"        fix: {f.fixit}")
+            if f.advice:
+                lines.append(
+                    f"        advise: x"
+                    f"{f.advice.get('predicted_speedup', 0):.3f} via "
+                    f"{f.advice.get('transforms', '?')} -> "
+                    f"{f.advice.get('predicted_bottleneck', '?')}")
         c = self.counts()
         lines.append(f"{c['error']} error(s), {c['warning']} warning(s), "
                      f"{c['note']} note(s)"
@@ -148,30 +154,7 @@ class AuditReport:
     # -- SARIF ------------------------------------------------------------
 
     def to_sarif(self) -> dict:
-        rule_ids: list[str] = []
-        descriptors: list[dict] = []
-        for r in CATALOG:
-            rule_ids.append(r.id)
-            descriptors.append({
-                "id": r.id,
-                "name": _pascal(r.slug),
-                "shortDescription": {"text": r.summary},
-                "fullDescription": {"text": r.description},
-                "defaultConfiguration": {
-                    "level": _sarif_level(r.base_severity)},
-            })
-        aid, aslug = rules_mod.AUDIT000
-        rule_ids.append(aid)
-        descriptors.append({
-            "id": aid, "name": _pascal(aslug),
-            "shortDescription": {
-                "text": "while loop trip count could not be resolved"},
-            "fullDescription": {
-                "text": "Cost estimates multiply loop bodies by their "
-                        "trip counts; unresolved loops make per-site "
-                        "traffic a lower bound."},
-            "defaultConfiguration": {"level": "note"},
-        })
+        rule_ids, descriptors = _rule_descriptors()
 
         results = []
         for f in self.findings:
@@ -198,6 +181,8 @@ class AuditReport:
                 props["bottleneck"] = f.bottleneck
             if f.fixit:
                 props["fixit"] = f.fixit
+            if f.advice:
+                props["advise"] = f.advice
             res["properties"] = props
             if f.suppressed:
                 res["suppressions"] = [{"kind": "inSource"}]
@@ -216,6 +201,76 @@ class AuditReport:
                 "results": results,
             }],
         }
+
+
+def _rule_descriptors() -> tuple[list[str], list[dict]]:
+    """The full reporting catalog: audit rules + AUDIT000 + KERN rules.
+
+    ``repro audit`` and ``repro lint`` findings share one SARIF rule
+    index, so their logs (and ``merge``d reports) interleave cleanly in
+    one run.  The lint catalog is imported lazily — it is numpy-only,
+    but keeping it out of module import keeps layering one-directional.
+    """
+    rule_ids: list[str] = []
+    descriptors: list[dict] = []
+
+    def add(rid, slug, summary, description, level):
+        rule_ids.append(rid)
+        descriptors.append({
+            "id": rid, "name": _pascal(slug),
+            "shortDescription": {"text": summary},
+            "fullDescription": {"text": description},
+            "defaultConfiguration": {"level": level},
+        })
+
+    for r in CATALOG:
+        add(r.id, r.slug, r.summary, r.description,
+            _sarif_level(r.base_severity))
+    aid, aslug = rules_mod.AUDIT000
+    add(aid, aslug, "while loop trip count could not be resolved",
+        "Cost estimates multiply loop bodies by their trip counts; "
+        "unresolved loops make per-site traffic a lower bound.", "note")
+    try:
+        from repro.lint.rules import KERN_CATALOG
+    except ImportError:             # lint layer absent: audit-only catalog
+        KERN_CATALOG = ()
+    for r in KERN_CATALOG:
+        add(r.id, r.slug, r.summary, r.description,
+            _sarif_level(r.base_severity))
+    return rule_ids, descriptors
+
+
+def merge_sarif(docs: Sequence[dict]) -> dict:
+    """Combine SARIF documents produced by this module into one run.
+
+    Results are re-indexed against the emitting doc's own rule list by
+    ``ruleId``, so audit and lint logs merge regardless of the rule
+    order they were written with (the CI merged-artifact path).
+    """
+    rule_ids, descriptors = _rule_descriptors()
+    results: list[dict] = []
+    for doc in docs:
+        for run in doc.get("runs", []):
+            for res in run.get("results", []):
+                res = dict(res)
+                rid = res.get("ruleId")
+                if rid in rule_ids:
+                    res["ruleIndex"] = rule_ids.index(rid)
+                else:
+                    res.pop("ruleIndex", None)
+                results.append(res)
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [{
+            "tool": {"driver": {
+                "name": TOOL_NAME,
+                "informationUri": "https://github.com/paper-repro/repro",
+                "rules": descriptors,
+            }},
+            "results": results,
+        }],
+    }
 
 
 def merge(reports: Sequence[AuditReport], *, label: str = "zoo",

@@ -83,6 +83,7 @@ class Finding:
     spec: Optional[WorkloadSpec] = None  # candidate workload (provenance)
     baseline_utilization: Optional[float] = None
     contention: Optional[float] = None  # utilization / baseline ratio
+    advice: Optional[dict] = None       # attach_advice: top-ranked transform
 
     def gate_rank(self) -> int:
         return SEVERITIES.index(self.severity)

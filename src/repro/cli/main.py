@@ -1,6 +1,6 @@
 """``python -m repro`` — the paper's tool as a command line.
 
-Seven subcommands over the ``repro.analysis`` Session API:
+Eight subcommands over the ``repro.analysis`` Session API:
 
     devices    list registered devices and their table-cache state
     profile    one workload -> utilization report + verdict
@@ -10,11 +10,19 @@ Seven subcommands over the ``repro.analysis`` Session API:
     compare    the §5 hist-vs-hist2 case study with a shift verdict
     audit      static HLO contention lint (model zoo / --hlo-file), can
                gate CI via --fail-on and emit SARIF
+    lint       symbolic jaxpr-level kernel lint (KERN rules) over the
+               registered Pallas kernels — same gate/SARIF machinery
+
+``audit`` and ``lint`` share the gating surface (``--fail-on``,
+``--suppress``, ``--advise``, ``--num-cores``, ``--no-artifact``) and
+the report tail (artifact under ``results/cli/``, exit code 1 when a
+non-suppressed finding reaches the gate); ``--advise`` runs the
+advisor on every gating finding and attaches the top-ranked transform.
 
 Every command prints its report to stdout (``--format text|json|csv``;
-``devices`` and ``validate`` render ``text|json`` only, ``audit`` adds
-``sarif`` — unsupported values are rejected by argparse ``choices``
-before any work happens)
+``devices`` and ``validate`` render ``text|json`` only, ``audit`` and
+``lint`` add ``sarif`` — unsupported values are rejected by argparse
+``choices`` before any work happens)
 and can persist it with ``--output PATH``; ``sweep``, ``advise`` and
 ``compare`` additionally drop an artifact under ``results/cli/`` unless
 told not to, and cache the collected counters under ``results/cache/``
@@ -379,15 +387,58 @@ def cmd_audit(args) -> int:
                 hlo_sink=sink_for(config), num_cores=args.num_cores))
         report = (reports[0] if len(reports) == 1
                   else audit_mod.merge(reports))
+    return _finish_findings(report, args, sess, tool="audit")
 
+
+def cmd_lint(args) -> int:
+    """Symbolic jaxpr-level lint over the registered Pallas kernels.
+
+    Traces each kernel (``--kernel`` selects a subset; default all) to
+    its jaxpr — zero kernel executions — and walks it for scratch-memory
+    scatter/accumulate sites.  Affine index streams get exact static
+    degree counters (bit-for-bit the trace provider's); data-dependent
+    ones emit KERN005 findings carrying a ``WorkloadSpec`` for dynamic
+    audit.  Shares the audit's gate/artifact/SARIF tail, so
+    ``repro lint --format sarif`` merges cleanly with audit logs.
+    """
+    from repro import lint as lint_mod
+
+    if getattr(args, "list", False):
+        _emit("\n".join(lint_mod.kernel_names()), args)
+        return 0
+    sess = Session(args.device, cache_dir=args.cache_dir)
+    names = args.kernel or None
+    if names and len(names) == 1:
+        report = lint_mod.lint_kernel(
+            names[0], session=sess, suppress=args.suppress or (),
+            num_cores=args.num_cores)
+    else:
+        report = lint_mod.lint_registry(
+            names, session=sess, suppress=args.suppress or (),
+            num_cores=args.num_cores)
+    return _finish_findings(report, args, sess, tool="lint")
+
+
+def _finish_findings(report, args, sess, *, tool: str) -> int:
+    """Shared ``audit``/``lint`` report tail (one implementation).
+
+    Optionally attaches advisor picks (``--advise``), renders and
+    persists the report under ``results/cli/<tool>/``, then converts
+    ``--fail-on`` gating into the process exit code — so both
+    subcommands gate CI identically.
+    """
+    from repro import audit as audit_mod
+
+    if getattr(args, "advise", False):
+        audit_mod.attach_advice(report, sess)
     ext = {"text": "txt", "json": "json", "csv": "csv",
            "sarif": "sarif"}[args.format]
     _emit(report.render(args.format), args,
-          default_artifact=f"audit/audit-{report.label}.{ext}")
+          default_artifact=f"{tool}/{tool}-{report.label}.{ext}")
     rc = audit_mod.exit_code(report, args.fail_on)
     if rc:
         gated = report.gated(args.fail_on)
-        print(f"audit: {len(gated)} finding(s) at or above "
+        print(f"{tool}: {len(gated)} finding(s) at or above "
               f"--fail-on {args.fail_on}", file=sys.stderr)
     return rc
 
@@ -409,6 +460,28 @@ def _add_common(p: argparse.ArgumentParser, *, formats=("text", "json",
     p.add_argument("--cache-dir", default=None,
                    help="service-time table cache dir "
                         "(default results/tables/)")
+
+
+def _add_gate(p: argparse.ArgumentParser, *, tool: str) -> None:
+    """The audit/lint shared gating + artifact surface (satellite of the
+    unified finding pipeline: one definition, two subcommands)."""
+    p.add_argument("--fail-on", default="error",
+                   choices=("never", "note", "warning", "error"),
+                   help="exit 1 when any non-suppressed finding is at or "
+                        "above this severity (default error)")
+    p.add_argument("--suppress", nargs="+", default=None, metavar="RULE",
+                   help="suppress rule ids (adds to in-source "
+                        "# repro: noqa comments)")
+    p.add_argument("--advise", action="store_true",
+                   help="run the advisor on every gating finding and "
+                        "attach the top-ranked transform (predicted "
+                        "speedup + post-transform bottleneck)")
+    p.add_argument("--num-cores", type=int, default=8,
+                   help="cores the synthesized streams are scored on "
+                        "(default 8)")
+    p.add_argument("--no-artifact", action="store_true",
+                   help=f"do not write the report artifacts under "
+                        f"results/cli/{tool}/")
 
 
 def _add_workload(p: argparse.ArgumentParser, *, multi: bool) -> None:
@@ -571,19 +644,21 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--variant", default="base",
                    help="optimization variant for shape tuning "
                         "(default base)")
-    p.add_argument("--fail-on", default="error",
-                   choices=("never", "note", "warning", "error"),
-                   help="exit 1 when any non-suppressed finding is at or "
-                        "above this severity (default error)")
-    p.add_argument("--suppress", nargs="+", default=None, metavar="RULE",
-                   help="suppress rule ids (adds to config # repro: noqa)")
-    p.add_argument("--num-cores", type=int, default=8,
-                   help="cores the synthesized streams are scored on "
-                        "(default 8)")
-    p.add_argument("--no-artifact", action="store_true",
-                   help="do not write the report/HLO artifacts under "
-                        "results/cli/audit/")
+    _add_gate(p, tool="audit")
     p.set_defaults(func=cmd_audit)
+
+    p = sub.add_parser(
+        "lint",
+        help="symbolic jaxpr-level Pallas kernel lint (KERN rules, "
+             "SARIF, CI gate)")
+    _add_common(p, formats=("text", "json", "csv", "sarif"))
+    p.add_argument("--kernel", nargs="+", default=None, metavar="NAME",
+                   help="registered kernel(s) to lint (default: all; "
+                        "see --list)")
+    p.add_argument("--list", action="store_true",
+                   help="print the registered kernel names and exit")
+    _add_gate(p, tool="lint")
+    p.set_defaults(func=cmd_lint)
 
     return ap
 

@@ -1,0 +1,129 @@
+"""Registered lint targets: the repo's Pallas kernels with probe inputs.
+
+Each entry builds a :class:`~repro.lint.analysis.LintTarget`: a
+traceable launcher, its operands in ref order, and (where the workload
+layer models it) a probe :class:`WorkloadSpec` whose geometry mirrors
+the paper's §5 study (``examples/advisor_histogram.py``: solid 2^15-px
+image, 8 waves per tile, 2500-cycle overhead) — so a KERN001 finding's
+``--advise`` run lands in the paper's up-to-30% rotation band.
+
+Probes are deterministic (fixed rng seed): lint output is reproducible
+run to run, like the audit's synthesized streams.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+PROBE_PIXELS = 1 << 15
+PROBE_WAVES_PER_TILE = 8
+PROBE_OVERHEAD_CYCLES = 2500.0
+_SEED = 0
+
+
+def _hist_target(variant: str):
+    from repro.data.images import make_image
+    from repro.analysis.workload import WorkloadSpec
+    from repro.lint.analysis import target_from_spec
+
+    spec = WorkloadSpec.from_histogram(
+        make_image("solid", PROBE_PIXELS), label=f"{variant}-solid",
+        variant=variant, waves_per_tile=PROBE_WAVES_PER_TILE,
+        overhead_cycles=PROBE_OVERHEAD_CYCLES)
+    return target_from_spec(spec)
+
+
+def _hist_weighted_target():
+    from repro.data.images import make_image
+    from repro.analysis.workload import WorkloadSpec
+    from repro.lint.analysis import target_from_spec
+
+    spec = WorkloadSpec.from_histogram(
+        make_image("solid", PROBE_PIXELS), label="hist-weighted-solid",
+        variant="hist", weighted=True,
+        waves_per_tile=PROBE_WAVES_PER_TILE,
+        overhead_cycles=PROBE_OVERHEAD_CYCLES)
+    return target_from_spec(spec)
+
+
+def _scatter_add_target():
+    from repro.analysis.workload import WorkloadSpec
+    from repro.lint.analysis import target_from_spec
+
+    rng = np.random.default_rng(_SEED)
+    n, d, segs = 8192, 32, 4096
+    ids = rng.integers(0, segs, size=n).astype(np.int32)
+    values = np.ones((n, d), np.float32)
+    spec = WorkloadSpec.from_scatter_add(
+        ids, values, segs, label="scatter_add-uniform")
+    return target_from_spec(spec)
+
+
+def _moe_dispatch_target():
+    import jax.numpy as jnp
+
+    from repro.analysis.workload import WorkloadSpec
+    from repro.core import timing
+    from repro.kernels.scatter_add import kernel as scat_kernel
+    from repro.kernels.scatter_add import ops as scat_ops
+    from repro.lint.analysis import LintTarget
+
+    rng = np.random.default_rng(_SEED)
+    n, experts = 8192, 64
+    ids = rng.integers(0, experts, size=n).astype(np.int32)
+    spec = WorkloadSpec.from_scatter_add(
+        ids, np.zeros((n, 1), np.float32), experts,
+        label="moe_dispatch-uniform", job_class=timing.POPC)
+
+    def fn(i):
+        return scat_kernel.bincount_pallas(i, experts)
+
+    return LintTarget(
+        label="moe_dispatch-uniform", fn=fn, args=(jnp.asarray(ids),),
+        operands=(ids,), spec=spec, module=scat_kernel,
+        job_class=timing.POPC,
+        waves_per_tile=scat_ops.default_waves_per_tile())
+
+
+def _flash_attention_target():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention import kernel as flash_kernel
+    from repro.lint.analysis import LintTarget
+
+    qkv = jax.ShapeDtypeStruct((4, 1024, 64), jnp.float32)
+
+    def fn(q, k, v):
+        return flash_kernel.flash_attention_pallas(q, k, v)
+
+    return LintTarget(
+        label="flash_attention", fn=fn, args=(qkv, qkv, qkv),
+        operands=(None, None, None), spec=None, module=flash_kernel,
+        job_class=None, waves_per_tile=None)
+
+
+KERNELS: dict[str, Callable] = {
+    "hist": lambda: _hist_target("hist"),
+    "hist2": lambda: _hist_target("hist2"),
+    "hist_weighted": _hist_weighted_target,
+    "scatter_add": _scatter_add_target,
+    "moe_dispatch": _moe_dispatch_target,
+    "flash_attention": _flash_attention_target,
+}
+
+
+def names() -> list[str]:
+    return list(KERNELS)
+
+
+def build_target(name: str):
+    try:
+        build = KERNELS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown lint kernel {name!r} (registered: "
+            f"{', '.join(KERNELS)})") from None
+    return build()
