@@ -20,6 +20,12 @@ Prints ``name,us_per_call,derived`` CSV rows (spec format):
                                 scalar loop on a 64-point grid, plus
                                 cold/warm persistent sweep-cache timings
                                 (CI perf canary via --min-batch-speedup)
+  * collect_batch_vs_loop     — columnar provider collection vs the
+                                per-point scalar ``collect`` loop on a
+                                256-point trace grid (row-wise bitwise
+                                equality asserted), plus a cold/warm
+                                sharded-cache sweep
+                                (CI perf canary via --min-collect-speedup)
   * advise_search             — optimization advisor over a 32-candidate
                                 frontier: one batch evaluation per
                                 frontier, zero scalar profiling, warm
@@ -319,6 +325,79 @@ def profile_batch_vs_loop() -> None:
          f"warm_speedup={us_cold / max(us_warm, 1e-9):.1f}x")
 
 
+LAST_COLLECT_SPEEDUP: float | None = None
+LAST_COLLECT_WARM: int | None = None
+
+
+def collect_batch_vs_loop() -> None:
+    """Columnar ``collect_batch`` vs the scalar ``collect`` loop (PR 8).
+
+    Counter-acquisition phase, on a 256-point grid of *distinct* index
+    streams (so nothing memoizes away): the same specs go through (a)
+    ``TraceProvider.collect`` point by point and (b) one
+    ``TraceProvider.collect_batch`` call.  Row-wise bitwise equality of
+    the two paths is asserted — the batch path is an acceleration, never
+    a reinterpretation.  Also times a cold sharded sweep (two shards
+    merging through one persistent cache directory) against the warm
+    merged re-sweep, which must collect nothing.  The measured speedup
+    and the warm collection count feed the ``--min-collect-speedup`` CI
+    canary.
+    """
+    import shutil
+    import tempfile
+
+    from repro.analysis.providers.trace import TraceProvider
+    from repro.core import counters as counters_mod
+
+    rng = np.random.default_rng(0)
+    streams = rng.integers(0, 256, size=(256, 1 << 10))
+    specs = [WorkloadSpec.from_indices(streams[i], 256, label=f"pt{i:03d}",
+                                       waves_per_tile=4)
+             for i in range(256)]
+    provider = TraceProvider()
+    dev = session().device
+
+    us_loop = _timeit(
+        lambda: [provider.collect(s, dev) for s in specs], 1)
+    us_batch = _timeit(
+        lambda: provider.collect_batch(specs, dev), 1)
+    speedup = us_loop / max(us_batch, 1e-9)
+    global LAST_COLLECT_SPEEDUP
+    LAST_COLLECT_SPEEDUP = speedup
+
+    loop_sets = [provider.collect(s, dev) for s in specs]
+    frame = provider.collect_batch(specs, dev)
+    mismatches = sum(
+        not counters_mod.bitwise_equal(frame.row(i), loop_sets[i])
+        for i in range(len(specs)))
+    assert mismatches == 0, \
+        f"collect_batch differs from collect on {mismatches}/256 rows"
+
+    tmp = tempfile.mkdtemp(prefix="repro-bench-collectcache-")
+    try:
+        t0 = time.perf_counter()
+        for i in range(2):
+            shard_sess = Session(device="v5e", persistent_cache=tmp)
+            shard_sess.sweep(specs, shards=2, shard_index=i)
+        us_cold = (time.perf_counter() - t0) * 1e6
+        warm_sess = Session(device="v5e", persistent_cache=tmp)
+        t0 = time.perf_counter()
+        warm_sess.sweep(specs)
+        us_warm = (time.perf_counter() - t0) * 1e6
+        warm_collected = warm_sess.stats["collected"]
+        global LAST_COLLECT_WARM
+        LAST_COLLECT_WARM = warm_collected
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    emit("collect_batch_vs_loop_256pt", us_batch,
+         f"loop_us={us_loop:.0f};batch_us={us_batch:.0f};"
+         f"collect_speedup={speedup:.1f}x;bitwise_mismatches={mismatches};"
+         f"cold_sharded_sweep_us={us_cold:.0f};"
+         f"warm_merged_sweep_us={us_warm:.0f};"
+         f"warm_collected={warm_collected}")
+
+
 LAST_ADVISE: dict | None = None
 
 
@@ -451,7 +530,7 @@ def roofline_table() -> None:
 ALL = [fig1_service_time_table, fig3_utilization_sweep, fig4_popc_vs_fao,
        fig5_reorder_speedup, sec5_model_vs_measured, lint_static_vs_trace,
        moe_dispatch_profile, sweep_grid_parallel, profile_batch_vs_loop,
-       advise_search, kernel_walltime, roofline_table]
+       collect_batch_vs_loop, advise_search, kernel_walltime, roofline_table]
 
 
 def main() -> None:
@@ -461,6 +540,11 @@ def main() -> None:
                     help="perf canary: exit 1 if profile_batch_vs_loop "
                          "measures less than this batch-vs-loop speedup "
                          "(requires the benchmark to have run)")
+    ap.add_argument("--min-collect-speedup", type=float, default=None,
+                    help="perf canary: exit 1 if collect_batch_vs_loop "
+                         "measures less than this batch-vs-scalar "
+                         "collection speedup, or its warm merged re-sweep "
+                         "collected anything")
     ap.add_argument("--advise-gate", action="store_true",
                     help="CI gate: exit 1 unless advise_search scored its "
                          "32-candidate frontier via one batch evaluation "
@@ -487,6 +571,24 @@ def main() -> None:
             print(f"error: warm-cache re-sweep collected "
                   f"{LAST_WARM_COLLECTED} point(s), expected 0 — the "
                   f"persistent sweep cache is not being hit",
+                  file=sys.stderr)
+            sys.exit(1)
+    if args.min_collect_speedup is not None:
+        import sys
+        if LAST_COLLECT_SPEEDUP is None:
+            print("error: --min-collect-speedup set but "
+                  "collect_batch_vs_loop did not run", file=sys.stderr)
+            sys.exit(2)
+        if LAST_COLLECT_SPEEDUP < args.min_collect_speedup:
+            print(f"error: collect_batch speedup "
+                  f"{LAST_COLLECT_SPEEDUP:.2f}x below the "
+                  f"{args.min_collect_speedup:.2f}x canary threshold",
+                  file=sys.stderr)
+            sys.exit(1)
+        if LAST_COLLECT_WARM:
+            print(f"error: warm merged re-sweep collected "
+                  f"{LAST_COLLECT_WARM} point(s), expected 0 — shard "
+                  f"results are not merging through the persistent cache",
                   file=sys.stderr)
             sys.exit(1)
     if args.advise_gate:

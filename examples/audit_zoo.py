@@ -57,7 +57,8 @@ def main() -> int:
     for f in report.findings:
         if f.site is not None:
             assert f.utilization is not None and f.fixit, f
-    assert sess.stats == {"collected": 0, "memo_hits": 0, "disk_hits": 0}, (
+    assert sess.stats == {"collected": 0, "memo_hits": 0, "disk_hits": 0,
+                          "batch_calls": 0}, (
         f"audit must be static, but providers ran: {sess.stats}")
 
     print(f"\naudit found {len(report.findings)} finding(s) across "

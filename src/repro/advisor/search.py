@@ -21,7 +21,6 @@ That batch-evaluation invariant is asserted by tests and the
 from __future__ import annotations
 
 import dataclasses
-from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Sequence
 
 import numpy as np
@@ -157,12 +156,11 @@ class AdvisorSearch:
 
     def _collect(self, frontier: Sequence[Candidate],
                  parallel: Optional[int]) -> list:
-        specs = [c.spec for c in frontier]
-        workers = min(parallel or 1, len(specs))
-        if workers <= 1:
-            return [self.session.collect_cached(s) for s in specs]
-        with ThreadPoolExecutor(max_workers=workers) as pool:
-            return list(pool.map(self.session.collect_cached, specs))
+        # one batch resolution per frontier: memo / persistent-cache hits
+        # in bulk, misses through provider.collect_batch (``parallel``
+        # only threads providers that fall back to a scalar loop)
+        return self.session.collect_cached_batch(
+            [c.spec for c in frontier], parallel=parallel)
 
     def _validate_top(self, report: AdvisorReport, k: int) -> None:
         """Paper-§5 check on the top-k: modeled vs measured counters.

@@ -12,7 +12,9 @@ sibling modules for the four shipped providers.
 from repro.analysis.providers.base import (  # noqa: F401
     PROVIDERS,
     CounterProvider,
+    collect_batch_fallback,
     get_provider,
+    provider_collect_batch,
     register_provider,
 )
 from repro.analysis.providers.hlo import HloProvider  # noqa: F401

@@ -29,20 +29,81 @@ real TPU registers here and every Session feature works unchanged.
 
 from __future__ import annotations
 
-from typing import Protocol, Union, runtime_checkable
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional, Protocol, Sequence, Union, runtime_checkable
 
-from repro.core.counters import CounterSet
+from repro.core.counters import CounterFrame, CounterSet
 
 
 @runtime_checkable
 class CounterProvider(Protocol):
-    """One counter-acquisition backend (see module docstring)."""
+    """One counter-acquisition backend (see module docstring).
+
+    ``collect`` is the required surface.  Providers may additionally
+    implement the batch extension
+
+        collect_batch(specs, device, *, parallel=None) -> CounterFrame
+
+    returning one frame row per spec, bit-for-bit equal row-wise to the
+    scalar ``collect`` (``CounterFrame`` rows are rectangular, so all
+    specs in one call must share ``num_cores`` — ``Session`` groups
+    before calling).  It is deliberately *not* part of the runtime
+    protocol: a minimal collect-only provider still registers and works
+    everywhere, with ``provider_collect_batch`` supplying the loop
+    fallback.
+    """
 
     name: str
 
     def collect(self, spec, device) -> CounterSet:
         """Acquire the spec's counters on the given device bundle."""
         ...
+
+
+def collect_batch_fallback(
+    provider: CounterProvider,
+    specs: Sequence,
+    device,
+    parallel: Optional[int] = None,
+) -> CounterFrame:
+    """Grouped/loop ``collect_batch`` for backends with no vectorized path.
+
+    One scalar ``collect`` per spec (optionally on a thread pool when
+    ``parallel`` > 1), stacked into a ``CounterFrame`` — trivially
+    bit-for-bit equal row-wise to the scalar path.  The kernel and hlo
+    providers delegate here, and so does any registered collect-only
+    provider via ``provider_collect_batch``.
+    """
+    specs = list(specs)
+    if not specs:
+        raise ValueError("collect_batch needs at least one spec")
+    workers = min(parallel or 1, len(specs))
+    if workers > 1:
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            csets = list(pool.map(lambda s: provider.collect(s, device),
+                                  specs))
+    else:
+        csets = [provider.collect(s, device) for s in specs]
+    return CounterFrame.from_sets(csets)
+
+
+def provider_collect_batch(
+    provider: CounterProvider,
+    specs: Sequence,
+    device,
+    parallel: Optional[int] = None,
+) -> CounterFrame:
+    """Dispatch to the provider's batch path, or the loop fallback.
+
+    The single call site contract the ``Session`` batch executor uses:
+    providers that implement ``collect_batch`` get the whole group at
+    once; collect-only providers (including user-registered ones) are
+    looped transparently.
+    """
+    batch = getattr(provider, "collect_batch", None)
+    if batch is None:
+        return collect_batch_fallback(provider, specs, device, parallel)
+    return batch(specs, device, parallel=parallel)
 
 
 PROVIDERS: dict[str, CounterProvider] = {}

@@ -13,14 +13,25 @@ when the scatter verdict is also needed.
 
 from __future__ import annotations
 
-from repro.analysis.providers.base import register_provider
-from repro.core.counters import CounterSet
+from typing import Optional, Sequence
+
+from repro.analysis.providers.base import (collect_batch_fallback,
+                                           register_provider)
+from repro.core.counters import CounterFrame, CounterSet
 
 
 class HloProvider:
     """Bytes/FLOPs/collective counters from compiled HLO."""
 
     name = "hlo"
+
+    def collect_batch(self, specs: Sequence, device, *,
+                      parallel: Optional[int] = None) -> CounterFrame:
+        """Loop fallback: each artifact's cost analysis is an independent
+        XLA call with no batched entry point.  All rows land on
+        ``num_cores=1`` (the per-chip normalization below), so any mix of
+        HLO specs frames rectangularly."""
+        return collect_batch_fallback(self, specs, device, parallel)
 
     def collect(self, spec, device) -> CounterSet:
         from repro.core import hlo as hlo_mod  # lazy: keeps import light

@@ -14,14 +14,25 @@ streams can be cross-validated against in-kernel counters.
 
 from __future__ import annotations
 
-from repro.analysis.providers.base import register_provider
-from repro.core.counters import CounterSet
+from typing import Optional, Sequence
+
+from repro.analysis.providers.base import (collect_batch_fallback,
+                                           register_provider)
+from repro.core.counters import CounterFrame, CounterSet
 
 
 class InstrumentedKernelProvider:
     """Counters read back from an instrumented Pallas launch."""
 
     name = "kernel"
+
+    def collect_batch(self, specs: Sequence, device, *,
+                      parallel: Optional[int] = None) -> CounterFrame:
+        """Grouped loop fallback: interpret-mode launches have no batched
+        form (each is a separate Pallas trace + execute), so the batch is
+        one scalar ``collect`` per spec — still one provider call per
+        sweep group from the Session's point of view."""
+        return collect_batch_fallback(self, specs, device, parallel)
 
     def collect(self, spec, device) -> CounterSet:
         del device  # interpret-mode kernels are device-independent

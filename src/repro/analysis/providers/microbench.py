@@ -14,12 +14,14 @@ independent time axis to compare against.
 
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import numpy as np
 
 from repro.analysis.providers.base import register_provider
 from repro.analysis.providers.trace import TraceProvider
 from repro.core import timing
-from repro.core.counters import CounterSet
+from repro.core.counters import CounterFrame, CounterSet
 
 
 class MicrobenchProvider(TraceProvider):
@@ -28,7 +30,20 @@ class MicrobenchProvider(TraceProvider):
     name = "microbench"
 
     def collect(self, spec, device) -> CounterSet:
-        cset = super().collect(spec, device)
+        return self._attach_wall_time(super().collect(spec, device), device)
+
+    def collect_batch(self, specs: Sequence, device, *,
+                      parallel: Optional[int] = None) -> CounterFrame:
+        """The inherited vectorized trace batch, plus the per-row wall
+        time post-pass (which the plain trace batch would silently drop —
+        this override is what keeps batch rows bit-identical to scalar
+        ``collect``)."""
+        frame = super().collect_batch(specs, device, parallel=parallel)
+        return CounterFrame.from_sets(
+            [self._attach_wall_time(frame.row(i), device)
+             for i in range(len(frame))])
+
+    def _attach_wall_time(self, cset: CounterSet, device) -> CounterSet:
         params = device.scatter
         n_hat = cset.occupancy(params.n_max) * params.n_max
         e = cset.e

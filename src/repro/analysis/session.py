@@ -26,17 +26,18 @@ import dataclasses
 import io
 import json
 import threading
-from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from repro.analysis.device import Device, get_device
-from repro.analysis.providers import CounterProvider, get_provider
+from repro.analysis.providers import (CounterProvider, get_provider,
+                                      provider_collect_batch)
 from repro.analysis.render import rows_to_csv
 from repro.analysis.sweep_cache import SweepCache
 from repro.analysis.workload import WorkloadSpec
 from repro.core import bottleneck, profiler, qmodel
+from repro.core import counters as counters_mod
 from repro.core.counters import CounterFrame, CounterSet
 
 
@@ -177,6 +178,9 @@ class ProviderComparison:
     rel_err: dict                # same keys, |x - ref| / |ref|
     utilization_delta: float     # U - U_ref (signed)
     wall_time_s: Optional[float] = None
+    # collect_batch([spec]).row(0) exactly equals collect(spec)?  None
+    # when the provider has no batch path (collect-only custom sources)
+    batch_bitwise_equal: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -238,6 +242,16 @@ class ValidationReport:
                           + "  ".join(f"{c.rel_err[k]:>12.2%}" for k in keys)
                           + "\n")
         buf.write(f"max relative error: {self.max_rel_err:.2%}\n")
+        checked = [c for c in self.comparisons
+                   if c.batch_bitwise_equal is not None]
+        if checked:
+            bad = [c.provider for c in checked if not c.batch_bitwise_equal]
+            if bad:
+                buf.write("batch collection MISMATCH (collect_batch != "
+                          "collect): " + ", ".join(bad) + "\n")
+            else:
+                buf.write("batch collection bit-identical: "
+                          + ", ".join(c.provider for c in checked) + "\n")
         return buf.getvalue()
 
 
@@ -278,9 +292,13 @@ class Session:
                 None if persistent_cache is True else persistent_cache)
         else:
             self.sweep_cache = None
-        # collection accounting: how many points were actually collected
-        # vs served from the in-process memo / the on-disk sweep cache
-        self.stats = {"collected": 0, "memo_hits": 0, "disk_hits": 0}
+        # collection accounting, consistent across the scalar, batch, and
+        # persistent-cache paths: points actually collected, points served
+        # from the in-process memo / the on-disk sweep cache, and how many
+        # provider batch calls the collected points took (O(groups), not
+        # O(points))
+        self.stats = {"collected": 0, "memo_hits": 0, "disk_hits": 0,
+                      "batch_calls": 0}
 
     # -- the pipeline -----------------------------------------------------
 
@@ -297,7 +315,7 @@ class Session:
         A single point is just a one-row ``CounterFrame`` through the
         same columnar batch path sweeps use.
         """
-        prof = self._profile_batch([self._collect_memoized(spec)])[0]
+        prof = self._profile_batch(self.collect_cached_batch([spec]))[0]
         self._last = self._as_result([spec], [prof])
         return prof
 
@@ -307,31 +325,46 @@ class Session:
         return self._last.verdicts[0]
 
     def sweep(self, specs: Sequence[WorkloadSpec], *,
-              parallel: Optional[int] = None) -> SweepResult:
+              parallel: Optional[int] = None,
+              shards: int = 1, shard_index: int = 0) -> SweepResult:
         """Profile every spec and analyze the sweep as a whole.
 
-        Two phases.  *Collection*: counter acquisition (trace synthesis,
-        interpret-mode kernel runs) dominates sweep cost; ``parallel``
-        spreads it over a thread pool of that many workers
-        (``None``/``1`` keeps the serial path), points are memoized by
-        content fingerprint (a spec already collected by this session
-        and provider is served relabeled from cache), and with
-        ``persistent_cache`` set the memo extends across processes via
-        ``results/cache/``.  *Model evaluation*: all collected points go
+        Two phases.  *Collection* runs the batch path
+        (``collect_cached_batch``): points are partitioned into
+        in-process memo hits, bulk on-disk ``SweepCache`` reads (when
+        ``persistent_cache`` is set), and one ``provider.collect_batch``
+        call per remaining miss group — a warm sweep touches zero
+        providers, a cold one makes O(groups) provider calls instead of
+        O(points).  ``parallel`` threads the loop fallback of providers
+        with no vectorized batch.  *Model evaluation*: all points go
         through ``profiler.profile_batch`` as one columnar
         ``CounterFrame`` pass — the whole §3 queue model in whole-array
         numpy ops, point-for-point identical to the per-point path.
         Result order always matches ``specs`` — neither phase reorders.
+
+        ``shards``/``shard_index`` turn the call into one shard of a
+        distributed sweep: the grid is deterministically strided as
+        ``specs[shard_index::shards]`` (every process slices the same
+        full grid the same way), each shard runs independently, and
+        shards merge through the persistent ``SweepCache`` as the shared
+        backing store — a follow-up full-grid sweep (or the CLI's
+        ``--merge``) assembles the complete result from cache hits.
         """
         specs = list(specs)
         if not specs:
             raise ValueError("sweep() needs at least one WorkloadSpec")
-        workers = min(parallel or 1, len(specs))
-        if workers <= 1:
-            csets = [self._collect_memoized(s) for s in specs]
-        else:
-            with ThreadPoolExecutor(max_workers=workers) as pool:
-                csets = list(pool.map(self._collect_memoized, specs))
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if not 0 <= shard_index < shards:
+            raise ValueError(f"shard_index must be in [0, {shards}), "
+                             f"got {shard_index}")
+        if shards > 1:
+            specs = specs[shard_index::shards]
+            if not specs:
+                raise ValueError(
+                    f"shard {shard_index}/{shards} owns no points — the "
+                    f"grid is smaller than the shard count")
+        csets = self.collect_cached_batch(specs, parallel=parallel)
         profiles = self._profile_batch(csets)
         self._last = self._as_result(specs, profiles)
         return self._last
@@ -406,18 +439,37 @@ class Session:
     def validate(self, spec: WorkloadSpec,
                  providers: Sequence[Union[str, CounterProvider]] = (
                      "trace", "kernel"),
-                 ) -> ValidationReport:
+                 *, check_batch: bool = True) -> ValidationReport:
         """Collect one spec through several providers and compare counters.
 
         The paper's §5 validation as a first-class call: the first
         provider is the reference (modeled), the rest are compared against
         it with per-counter relative errors (``N``, ``O``, ``e``,
         ``n_hat``) and the scatter-utilization delta.
+
+        With ``check_batch`` (the default) every provider that implements
+        ``collect_batch`` is additionally collected as a batch of one and
+        compared bit-for-bit against its scalar ``collect`` — the batch
+        path's acceptance invariant, reported per provider as
+        ``batch_bitwise_equal`` (``None`` for collect-only providers).
         """
         provs = [get_provider(p) for p in providers]
         if len(provs) < 2:
             raise ValueError("validate() needs at least two providers")
         csets = [p.collect(spec, self.device) for p in provs]
+        batch_equal: list[Optional[bool]] = []
+        for p, cset in zip(provs, csets):
+            if check_batch and hasattr(p, "collect_batch"):
+                row = p.collect_batch([spec], self.device).row(0)
+                # a provider that measures wall time (microbench) can
+                # never repeat the clock bit-for-bit — the check covers
+                # every modeled field, not the timing
+                ignore = (("wall_time_s", "meta")
+                          if cset.wall_time_s is not None else ())
+                batch_equal.append(
+                    counters_mod.bitwise_equal(cset, row, ignore=ignore))
+            else:
+                batch_equal.append(None)
         profiles = self._profile_batch(csets)
 
         def numbers(cset: CounterSet, prof) -> dict:
@@ -431,7 +483,8 @@ class Session:
 
         ref = numbers(csets[0], profiles[0])
         comparisons = []
-        for prov, cset, prof in zip(provs, csets, profiles):
+        for prov, cset, prof, beq in zip(provs, csets, profiles,
+                                         batch_equal):
             got = numbers(cset, prof)
             rel = {
                 k: (abs(got[k] - ref[k]) / abs(ref[k]) if ref[k]
@@ -441,7 +494,8 @@ class Session:
             comparisons.append(ProviderComparison(
                 provider=prov.name, counters=got, rel_err=rel,
                 utilization_delta=got["U"] - ref["U"],
-                wall_time_s=cset.wall_time_s))
+                wall_time_s=cset.wall_time_s,
+                batch_bitwise_equal=beq))
         return ValidationReport(
             device=self.device.name, label=spec.label,
             reference=provs[0].name, comparisons=comparisons)
@@ -464,12 +518,106 @@ class Session:
     def collect_cached(self, spec: WorkloadSpec) -> CounterSet:
         """``collect`` behind this session's memo + persistent cache.
 
-        The public face of the sweep engine's per-point cache resolution
-        (see ``_collect_memoized``): layered tools like the advisor call
-        this so their counter acquisition shares the same in-process
-        memo and on-disk ``SweepCache`` a ``sweep`` would use.
+        The scalar face of ``collect_cached_batch`` (a batch of one):
+        layered tools like the advisor call this so their counter
+        acquisition shares the same in-process memo and on-disk
+        ``SweepCache`` a ``sweep`` would use.
         """
-        return self._collect_memoized(spec)
+        return self.collect_cached_batch([spec])[0]
+
+    def collect_cached_batch(self, specs: Sequence[WorkloadSpec], *,
+                             parallel: Optional[int] = None,
+                             ) -> list[CounterSet]:
+        """Batch cache resolution: memo -> bulk disk reads -> providers.
+
+        The sweep engine's collection phase.  Per point, in order:
+
+        1. in-process memo by ``(provider, fingerprint)`` — including
+           duplicates *within this batch* (later occurrences of a
+           fingerprint count as memo hits, exactly as the sequential
+           scalar path would see them);
+        2. bulk ``SweepCache.get_many`` for the remaining fingerprints
+           (when ``persistent_cache`` is set);
+        3. one ``provider.collect_batch`` per ``num_cores`` group of the
+           still-missing specs (``CounterFrame`` rows are rectangular),
+           with bulk write-back to the memo and the disk cache.
+
+        Specs whose content cannot be hashed (``fingerprint() is None``)
+        bypass the caches and are collected point by point.  Hits are
+        *relabeled copies* — the fingerprint excludes the label, so
+        cached counters may carry another point's name.  Output order
+        matches ``specs``.
+        """
+        specs = list(specs)
+        out: list = [None] * len(specs)
+        pending: list[tuple[int, str]] = []   # cache-eligible memo misses
+        first_of_fp: dict[str, int] = {}
+        duplicates: list[tuple[int, int]] = []
+        for i, spec in enumerate(specs):
+            fp = spec.fingerprint()
+            if fp is None:
+                out[i] = self.collect(spec)
+                with self._memo_lock:
+                    self.stats["collected"] += 1
+                continue
+            with self._memo_lock:
+                hit = self._collect_memo.get((self.provider.name, fp))
+            if hit is not None:
+                with self._memo_lock:
+                    self.stats["memo_hits"] += 1
+                out[i] = dataclasses.replace(hit, label=spec.label)
+                continue
+            if fp in first_of_fp:
+                duplicates.append((i, first_of_fp[fp]))
+                with self._memo_lock:
+                    self.stats["memo_hits"] += 1
+                continue
+            first_of_fp[fp] = i
+            pending.append((i, fp))
+        # bulk disk reads for the memo misses
+        misses: list[tuple[int, str, Optional[str]]] = []
+        if pending and self.sweep_cache is not None:
+            disk_keys = {
+                i: self.sweep_cache.key(self.provider.name, fp,
+                                        self.device.table_key())
+                for i, fp in pending}
+            found = self.sweep_cache.get_many(disk_keys.values())
+            for i, fp in pending:
+                hit = found.get(disk_keys[i])
+                if hit is not None:
+                    with self._memo_lock:
+                        self.stats["disk_hits"] += 1
+                        self._collect_memo[(self.provider.name, fp)] = hit
+                    out[i] = dataclasses.replace(hit, label=specs[i].label)
+                else:
+                    misses.append((i, fp, disk_keys[i]))
+        else:
+            misses = [(i, fp, None) for i, fp in pending]
+        # one provider batch per num_cores group (frames are rectangular)
+        by_cores: dict[int, list] = {}
+        for item in misses:
+            by_cores.setdefault(specs[item[0]].num_cores, []).append(item)
+        for items in by_cores.values():
+            group = [specs[i] for i, _, _ in items]
+            frame = provider_collect_batch(self.provider, group,
+                                           self.device, parallel)
+            with self._memo_lock:
+                self.stats["collected"] += len(group)
+                self.stats["batch_calls"] += 1
+            write_back = {}
+            for row, (i, fp, disk_key) in enumerate(items):
+                cset = frame.row(row)
+                with self._memo_lock:
+                    self._collect_memo[(self.provider.name, fp)] = cset
+                if disk_key is not None:
+                    write_back[disk_key] = cset
+                out[i] = dataclasses.replace(cset, label=specs[i].label)
+            if write_back:
+                self.sweep_cache.put_many(write_back)
+        # duplicates resolve off their batch-mate's now-filled slot
+        for i, j in duplicates:
+            out[i] = dataclasses.replace(out[j], label=specs[i].label)
+        return out
 
     def profile_sets(self, csets: Sequence[CounterSet],
                      ) -> list[profiler.WorkloadProfile]:
@@ -509,46 +657,6 @@ class Session:
                 profiles[i] = prof
         return profiles
 
-    def _collect_memoized(self, spec: WorkloadSpec) -> CounterSet:
-        """``collect`` with the content-hash caches in front.
-
-        Resolution order: in-process memo -> on-disk ``SweepCache``
-        (when ``persistent_cache`` is enabled) -> the provider; misses
-        populate both layers.  Hits are *relabeled copies*: the
-        fingerprint excludes the label, so the cached counters may carry
-        another point's name.  Specs whose content cannot be hashed
-        (``fingerprint() is None``) bypass the caches entirely.
-        """
-        fp = spec.fingerprint()
-        if fp is None:
-            with self._memo_lock:
-                self.stats["collected"] += 1
-            return self.collect(spec)
-        key = (self.provider.name, fp)
-        with self._memo_lock:
-            hit = self._collect_memo.get(key)
-        if hit is not None:
-            with self._memo_lock:
-                self.stats["memo_hits"] += 1
-            return dataclasses.replace(hit, label=spec.label)
-        disk_key = None
-        if self.sweep_cache is not None:
-            disk_key = self.sweep_cache.key(
-                self.provider.name, fp, self.device.table_key())
-            hit = self.sweep_cache.get(disk_key)
-            if hit is not None:
-                with self._memo_lock:
-                    self.stats["disk_hits"] += 1
-                    self._collect_memo[key] = hit
-                return dataclasses.replace(hit, label=spec.label)
-        hit = self.collect(spec)
-        with self._memo_lock:
-            self.stats["collected"] += 1
-            self._collect_memo[key] = hit
-        if self.sweep_cache is not None:
-            self.sweep_cache.put(disk_key, hit)
-        return dataclasses.replace(hit, label=spec.label)
-
     def _as_result(self, specs, profiles) -> SweepResult:
         verdicts = [bottleneck.classify(p) for p in profiles]
         shifts = bottleneck.detect_shifts(profiles, tol=self.shift_tol)
@@ -565,6 +673,7 @@ def sweep_grid(base: WorkloadSpec, axes: Optional[dict] = None, *,
                devices: Sequence[Union[str, Device]] = ("v5e",),
                provider: Union[str, CounterProvider] = "trace",
                parallel: Optional[int] = None,
+               shards: int = 1, shard_index: int = 0,
                **session_kw) -> dict[str, SweepResult]:
     """Expand a base spec over a parameter grid and sweep it per device.
 
@@ -581,10 +690,13 @@ def sweep_grid(base: WorkloadSpec, axes: Optional[dict] = None, *,
 
     Extra keyword arguments are forwarded to each ``Session`` (e.g.
     ``cache_dir``, ``use_true_n``, ``shift_tol``).
+    ``shards``/``shard_index`` stride the expanded grid the same way
+    ``Session.sweep`` does — every device sweeps this shard's slice.
     """
     specs = base.grid(**axes) if axes else [base]
     out: dict[str, SweepResult] = {}
     for dev in devices:
         sess = Session(dev, provider=provider, **session_kw)
-        out[sess.device.name] = sess.sweep(specs, parallel=parallel)
+        out[sess.device.name] = sess.sweep(
+            specs, parallel=parallel, shards=shards, shard_index=shard_index)
     return out

@@ -174,6 +174,94 @@ class SweepCache:
     def put(self, key: str, cset: CounterSet) -> None:
         save_counter_set(cset, self.path(key))
 
+    def get_many(self, keys) -> dict[str, CounterSet]:
+        """Bulk read: ``{key: CounterSet}`` for the keys present.
+
+        Misses (absent or unreadable entries) are simply omitted — the
+        batch sweep executor treats anything not in the returned dict as
+        a point to collect.
+        """
+        out: dict[str, CounterSet] = {}
+        for key in keys:
+            hit = self.get(key)
+            if hit is not None:
+                out[key] = hit
+        return out
+
+    def put_many(self, entries: dict) -> None:
+        """Bulk write-back; each entry keeps the atomic tmp+rename write,
+        so concurrent shards racing on the same keys stay safe."""
+        for key, cset in entries.items():
+            self.put(key, cset)
+
+    def iter_entries(self):
+        """Yield ``(path, CounterSet | None)`` per on-disk entry
+        (``None`` marks a corrupt/unreadable one), in stable path order —
+        the shard-merge and maintenance iteration surface."""
+        if not self.root.exists():
+            return
+        for f in sorted(self.root.glob("*.npz")):
+            try:
+                yield f, load_counter_set(f)
+            except Exception:
+                yield f, None
+
+    def stats(self) -> dict:
+        """Entry count, bytes on disk, and a per-provider breakdown.
+
+        The provider is recovered from each entry's stored ``source``
+        field (keys are opaque hashes); unreadable entries are counted
+        under ``"<corrupt>"`` so the report never hides them.
+        """
+        entries = 0
+        total_bytes = 0
+        by_provider: dict[str, dict] = {}
+        for path, cset in self.iter_entries():
+            size = path.stat().st_size
+            entries += 1
+            total_bytes += size
+            source = cset.source if cset is not None else "<corrupt>"
+            bucket = by_provider.setdefault(source, {"entries": 0, "bytes": 0})
+            bucket["entries"] += 1
+            bucket["bytes"] += size
+        return {"root": str(self.root), "entries": entries,
+                "bytes": total_bytes,
+                "by_provider": dict(sorted(by_provider.items()))}
+
+    def prune(self, max_bytes: int) -> tuple[int, int]:
+        """LRU-by-mtime eviction down to at most ``max_bytes`` on disk.
+
+        Oldest-written entries go first (every write refreshes mtime via
+        the tmp+rename, so mtime is last-write recency).  Returns
+        ``(entries_removed, bytes_freed)``.  Races with concurrent
+        writers are benign: a vanished file is skipped, and evicting an
+        entry another process still wants only costs it a re-collection.
+        """
+        if max_bytes < 0:
+            raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
+        files = []
+        if self.root.exists():
+            for f in self.root.glob("*.npz"):
+                try:
+                    st = f.stat()
+                except OSError:
+                    continue
+                files.append((st.st_mtime, st.st_size, f))
+        total = sum(size for _, size, _ in files)
+        removed = 0
+        freed = 0
+        for _, size, f in sorted(files, key=lambda t: (t[0], t[2].name)):
+            if total <= max_bytes:
+                break
+            try:
+                f.unlink()
+            except OSError:
+                continue
+            total -= size
+            removed += 1
+            freed += size
+        return removed, freed
+
     def clear(self) -> int:
         """Delete every cache entry; returns how many were removed."""
         n = 0

@@ -303,31 +303,30 @@ def evaluate(scan: ScanResult, session, *, label: str = "module",
             if rule.matches(site):
                 candidates.append((rule, site))
 
-    csets, specs = [], []
+    # every candidate's stream (plus the shared baseline) goes through
+    # one batched trace synthesis — the whole audit's wave degrees are a
+    # few large numpy ops instead of one trace_from_indices per finding
+    streams, classes, labels, specs = [], [], [], []
     for rule, site in candidates:
         idx = rule.synthesize(site)
         point_label = f"{label}/{site.op_name}"
         specs.append(rule.spec(site, point_label, indices=idx))
-        geom = {}
-        if isinstance(rule, WavesExceedPipeline):
-            geom = dict(waves_per_tile=1, pipeline_depth=2)
-        trace = counters_mod.trace_from_indices(
-            idx, max(2, site.num_bins), num_cores=num_cores,
-            job_class=rule.job_class, **geom)
-        csets.append(counters_mod.CounterSet.from_trace(
-            trace, label=point_label, num_cores=num_cores,
-            bytes_read=float(idx.size * 4),
-            source="audit"))
-    if csets:
+        streams.append(idx)
+        classes.append(rule.job_class)
+        labels.append(point_label)
+    csets = []
+    if streams:
         # shared conflict-free baseline: unique addresses, same length,
         # same core count — the denominator of every contention ratio
-        base_idx = np.arange(STREAM_LEN, dtype=np.int64)
-        base_trace = counters_mod.trace_from_indices(
-            base_idx, STREAM_LEN, num_cores=num_cores)
-        csets.append(counters_mod.CounterSet.from_trace(
-            base_trace, label=f"{label}/__baseline__",
-            num_cores=num_cores, bytes_read=float(STREAM_LEN * 4),
-            source="audit"))
+        streams.append(np.arange(STREAM_LEN, dtype=np.int64))
+        classes.append(counters_mod.timing.FAO)
+        labels.append(f"{label}/__baseline__")
+        traces = counters_mod.traces_from_index_batch(
+            streams, num_cores=num_cores, job_class=classes)
+        csets = [counters_mod.CounterSet.from_trace(
+            tr, label=lab, num_cores=num_cores,
+            bytes_read=float(stream.size * 4), source="audit")
+            for tr, lab, stream in zip(traces, labels, streams)]
     profiles = session.profile_sets(csets) if csets else []
     u_base = float(profiles[-1].scatter_utilization) if profiles else 1.0
     u_base = max(u_base, 1e-9)

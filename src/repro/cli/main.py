@@ -1,10 +1,13 @@
 """``python -m repro`` — the paper's tool as a command line.
 
-Eight subcommands over the ``repro.analysis`` Session API:
+Nine subcommands over the ``repro.analysis`` Session API:
 
     devices    list registered devices and their table-cache state
     profile    one workload -> utilization report + verdict
-    sweep      cartesian grid sweep (sizes x geometry), concurrent points
+    sweep      cartesian grid sweep (sizes x geometry), batch-collected;
+               --shards N --shard-index i slices the grid across
+               processes (merging through the persistent counter cache),
+               --merge assembles the full grid from the cache
     advise     search workload transforms, rank model-predicted fixes
     validate   multi-provider counter comparison (paper §5)
     compare    the §5 hist-vs-hist2 case study with a shift verdict
@@ -12,6 +15,9 @@ Eight subcommands over the ``repro.analysis`` Session API:
                gate CI via --fail-on and emit SARIF
     lint       symbolic jaxpr-level kernel lint (KERN rules) over the
                registered Pallas kernels — same gate/SARIF machinery
+    cache      persistent counter-cache maintenance: stats (entries,
+               bytes, per-provider breakdown), clear, and
+               prune --max-bytes (LRU-by-mtime eviction)
 
 ``audit`` and ``lint`` share the gating surface (``--fail-on``,
 ``--suppress``, ``--advise``, ``--num-cores``, ``--no-artifact``) and
@@ -48,6 +54,30 @@ from repro.cli import workloads as wl
 from repro.core import bottleneck
 
 DEFAULT_JOBS = 8   # sweep-parallelism knob (thread pool over providers)
+
+
+def _positive_int(text: str) -> int:
+    """argparse type: an integer >= 1 (rejects 0/-N up front, exit 2)."""
+    try:
+        value = int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"invalid int value: {text!r}")
+    if value < 1:
+        raise argparse.ArgumentTypeError(
+            f"must be a positive integer, got {text!r}")
+    return value
+
+
+def _nonneg_int(text: str) -> int:
+    """argparse type: an integer >= 0."""
+    try:
+        value = int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"invalid int value: {text!r}")
+    if value < 0:
+        raise argparse.ArgumentTypeError(
+            f"must be a non-negative integer, got {text!r}")
+    return value
 
 
 def results_dir() -> Path:
@@ -134,6 +164,17 @@ def cmd_profile(args) -> int:
 
 
 def cmd_sweep(args) -> int:
+    """Grid sweep; also one shard of a distributed sweep, or its merge.
+
+    ``--shards N --shard-index i`` sweeps the deterministic stride
+    ``specs[i::N]`` of the full grid — run one process per shard (any
+    order, even concurrently: cache writes are atomic) and they share
+    the persistent counter cache as the backing store.  ``--merge``
+    then sweeps the full grid normally; with every point already cached
+    it collects nothing and renders bit-identically to a single-process
+    sweep (missing points are simply re-collected — the cache is an
+    accelerator, never a correctness input).
+    """
     base_specs, axes = wl.build_specs(args)
     specs = wl.expand_grid(base_specs, axes)
     devices = args.devices or [args.device]
@@ -145,10 +186,16 @@ def cmd_sweep(args) -> int:
         sess = Session(dev, provider=args.provider,
                        cache_dir=args.cache_dir, shift_tol=args.shift_tol,
                        persistent_cache=_sweep_cache(args))
-        results[sess.device.name] = sess.sweep(specs, parallel=jobs)
+        results[sess.device.name] = sess.sweep(
+            specs, parallel=jobs, shards=args.shards,
+            shard_index=args.shard_index)
         for k in stats:
             stats[k] += sess.stats[k]
     tag = "-".join(results)
+    if args.shards > 1:
+        # per-shard artifact names keep concurrent shard processes from
+        # overwriting each other's reports
+        tag += f"-shard{args.shard_index}of{args.shards}"
     ext = {"text": "txt", "json": "json", "csv": "csv"}[args.format]
     report = _render_sweeps(results, args.format)
     if args.format == "text":
@@ -443,6 +490,46 @@ def _finish_findings(report, args, sess, *, tool: str) -> int:
     return rc
 
 
+def cmd_cache(args) -> int:
+    """Persistent counter-cache maintenance (``results/cache/``).
+
+    ``stats`` reports entry count, bytes on disk, and a per-provider
+    breakdown (recovered from each entry's stored ``source`` field);
+    ``clear`` removes everything; ``prune --max-bytes N`` evicts
+    least-recently-written entries (LRU by mtime — every cache write
+    refreshes it) until at most N bytes remain — the size bound a
+    long-running shared cache needs.
+    """
+    from repro.analysis import SweepCache
+
+    def fmt_bytes(n: int) -> str:
+        return f"{n / 1e6:.2f} MB" if n >= 1e5 else f"{n} B"
+
+    cache = SweepCache()
+    if args.action == "stats":
+        stats = cache.stats()
+        if args.format == "json":
+            _emit(json.dumps(stats, indent=2), args)
+            return 0
+        lines = [f"cache root: {stats['root']}",
+                 f"{stats['entries']} entries, {fmt_bytes(stats['bytes'])}"]
+        for source, b in stats["by_provider"].items():
+            lines.append(f"  {source:>12}  {b['entries']:>6} entries  "
+                         f"{fmt_bytes(b['bytes']):>12}")
+        _emit("\n".join(lines), args)
+        return 0
+    if args.action == "clear":
+        removed = cache.clear()
+        _emit(f"removed {removed} cache entries", args)
+        return 0
+    # prune (argparse validation guarantees --max-bytes is present)
+    removed, freed = cache.prune(args.max_bytes)
+    stats = cache.stats()
+    _emit(f"pruned {removed} entries ({fmt_bytes(freed)}); "
+          f"{stats['entries']} left ({fmt_bytes(stats['bytes'])})", args)
+    return 0
+
+
 # -- parser ------------------------------------------------------------------
 
 
@@ -544,9 +631,22 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--devices", nargs="+", default=None, metavar="DEV",
                    help="sweep the grid on several devices "
                         "(outermost axis; overrides --device)")
-    p.add_argument("--jobs", type=int, default=None,
+    p.add_argument("--jobs", type=_positive_int, default=None,
                    help=f"concurrent collection threads (default "
                         f"min({DEFAULT_JOBS}, points); 1 = serial)")
+    p.add_argument("--shards", type=_positive_int, default=1,
+                   help="split the grid into this many deterministic "
+                        "stride slices; this process sweeps only "
+                        "--shard-index's slice (shards merge through the "
+                        "persistent counter cache; default 1)")
+    p.add_argument("--shard-index", type=_nonneg_int, default=0,
+                   help="which slice of a --shards split this process "
+                        "owns (0-based; default 0)")
+    p.add_argument("--merge", action="store_true",
+                   help="assemble the full grid from the persistent "
+                        "counter cache (a warm full sweep: collects "
+                        "nothing when every shard has run; incompatible "
+                        "with --shards/--no-cache)")
     p.add_argument("--shift-tol", type=float, default=bottleneck.SHIFT_TOL,
                    help="relative lead a new unit needs to count as a "
                         "bottleneck shift (default %(default)s)")
@@ -574,7 +674,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--beam-width", type=int, default=8,
                    help="compositions each search level extends "
                         "(default %(default)s)")
-    p.add_argument("--jobs", type=int, default=None,
+    p.add_argument("--jobs", type=_positive_int, default=None,
                    help="concurrent collection threads per frontier")
     p.add_argument("--no-artifact", action="store_true",
                    help="do not write the default results/cli/ artifact")
@@ -613,7 +713,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--llc-bytes", type=wl.parse_int, default=1 << 21)
     p.add_argument("--miss-latency", type=float, default=800.0)
     p.add_argument("--hide-concurrency", type=float, default=48.0)
-    p.add_argument("--jobs", type=int, default=None,
+    p.add_argument("--jobs", type=_positive_int, default=None,
                    help="concurrent collection threads per sweep")
     p.add_argument("--no-artifact", action="store_true")
     p.add_argument("--no-cache", action="store_true",
@@ -660,11 +760,55 @@ def build_parser() -> argparse.ArgumentParser:
     _add_gate(p, tool="lint")
     p.set_defaults(func=cmd_lint)
 
+    p = sub.add_parser(
+        "cache",
+        help="persistent counter-cache maintenance (stats/clear/prune)")
+    p.add_argument("action", choices=("stats", "clear", "prune"),
+                   help="stats: entry count, bytes, per-provider "
+                        "breakdown; clear: remove everything; prune: "
+                        "LRU-by-mtime eviction down to --max-bytes")
+    p.add_argument("--max-bytes", type=wl.parse_int, default=None,
+                   metavar="N",
+                   help="prune target: evict least-recently-written "
+                        "entries until at most N bytes remain "
+                        "(accepts 2^20 notation; required for prune)")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--output", metavar="PATH", default=None)
+    p.set_defaults(func=cmd_cache)
+
     return ap
 
 
+def _validate_args(ap: argparse.ArgumentParser, args) -> None:
+    """Cross-field argument validation, up front (argparse exit code 2).
+
+    Per-field range checks live in the argparse types
+    (``_positive_int``/``_nonneg_int``); anything relating two flags is
+    checked here, before any session or device work starts.
+    """
+    shards = getattr(args, "shards", 1)
+    shard_index = getattr(args, "shard_index", 0)
+    if shard_index >= shards:
+        ap.error(f"--shard-index {shard_index} is out of range for "
+                 f"--shards {shards} (valid: 0..{shards - 1})")
+    if getattr(args, "merge", False):
+        if shards > 1 or shard_index:
+            ap.error("--merge assembles the full grid from the cache; "
+                     "drop --shards/--shard-index")
+        if getattr(args, "no_cache", False):
+            ap.error("--merge reads the persistent counter cache; it "
+                     "cannot be combined with --no-cache")
+    if args.command == "cache":
+        if args.action == "prune" and args.max_bytes is None:
+            ap.error("cache prune requires --max-bytes")
+        if args.max_bytes is not None and args.max_bytes < 0:
+            ap.error(f"--max-bytes must be >= 0, got {args.max_bytes}")
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
-    args = build_parser().parse_args(argv)
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    _validate_args(ap, args)
     # hlo specs carry no wave trace: route them to the hlo provider unless
     # the user explicitly picked another backend
     if getattr(args, "workload", None) == "hlo" \

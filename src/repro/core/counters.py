@@ -153,27 +153,41 @@ def concat_traces(traces: Sequence[WaveTrace]) -> WaveTrace:
     )  # geometry from the first trace: concat is per-launch, not cross-launch
 
 
-def _degrees_full_waves(idx2d: np.ndarray, group: int,
-                        chunk: int = 512) -> np.ndarray:
-    """``wave_degree`` for a (W, wave) block of *complete* waves at once.
+def _degrees_full_waves(idx: np.ndarray, group: int,
+                        chunk: int = 2048) -> np.ndarray:
+    """``wave_degree`` for a (..., wave) block of *complete* waves at once.
 
-    Bit-identical to calling ``wave_degree`` per row (same multiplicity
-    sums, same per-wave mean over the same group axis), but issued as a
-    few large numpy ops instead of W small ones: the hot path of trace
-    synthesis drops from Python-loop speed to memory bandwidth, and the
-    big ops release the GIL — which is what lets ``Session.sweep``'s
-    thread pool actually overlap points.  Chunked to bound the (chunk, G,
-    group, group) comparison tensor's working set.
+    The trailing axis is the wave; any leading axes — a single launch's
+    (W,) wave list, or a whole sweep's (P, W) points-by-waves grid — are
+    flattened, processed in chunks, and restored on the way out.
+    Bit-identical to calling ``wave_degree`` per row: the maximum
+    multiplicity within a commit group equals the longest run of equal
+    values once the group is sorted, so the O(group^2) pairwise-equality
+    tensor collapses to a sort plus O(group) run-length passes — exact
+    integer counts either way, fed through the same int64 ``mean`` over
+    the same group axis (the per-row result never depends on which chunk
+    a row lands in).  The big ops release the GIL — which is what lets
+    ``Session.sweep``'s thread pool actually overlap points — and the
+    chunking bounds the sorted copy's working set.
     """
-    W, wave = idx2d.shape
+    idx = np.asarray(idx)
+    lead = idx.shape[:-1]
+    wave = idx.shape[-1]
+    flat = idx.reshape(-1, wave)
+    W = flat.shape[0]
     out = np.empty(W, np.float64)
     G = wave // group
-    for s in range(0, W, chunk):
-        g = idx2d[s:s + chunk].reshape(-1, G, group)
-        eq = g[:, :, :, None] == g[:, :, None, :]
-        mult = eq.sum(axis=3)
-        out[s:s + chunk] = mult.max(axis=2).mean(axis=1)
-    return out
+    ar = np.arange(group, dtype=np.int64)
+    for st in range(0, W, chunk):
+        g = flat[st:st + chunk].reshape(-1, G, group)
+        s = np.sort(g, axis=-1)
+        start = np.empty(s.shape, bool)     # True where a new run begins
+        start[..., 0] = True
+        start[..., 1:] = s[..., 1:] != s[..., :-1]
+        first = np.maximum.accumulate(np.where(start, ar, 0), axis=-1)
+        mult = (ar - first).max(axis=-1) + 1    # (n, G) max multiplicity
+        out[st:st + chunk] = mult.mean(axis=1)
+    return out.reshape(lead)
 
 
 def trace_from_indices(
@@ -221,6 +235,85 @@ def trace_from_indices(
         waves_per_tile=waves_per_tile,
         pipeline_depth=pipeline_depth,
     )
+
+
+def _per_point(value, num_points: int, name: str) -> list:
+    """Broadcast a scalar parameter to P points (sequences pass through)."""
+    if isinstance(value, (list, tuple, np.ndarray)):
+        out = list(value)
+        if len(out) != num_points:
+            raise ValueError(f"{name} has {len(out)} entries for "
+                             f"{num_points} index streams")
+        return out
+    return [value] * num_points
+
+
+def traces_from_index_batch(
+    index_streams: Sequence[np.ndarray],
+    *,
+    num_cores=1,
+    wave: int = LANES,
+    job_class=timing.FAO,
+    waves_per_tile=1,
+    pipeline_depth=2,
+) -> list[WaveTrace]:
+    """Batch ``trace_from_indices``: P index streams -> P wave traces.
+
+    The whole grid's complete waves go through ``_degrees_full_waves`` as
+    one stacked (P', W, wave) tensor per stream-length group, instead of
+    one call per point — this is what makes a cold sweep's collection
+    cost a handful of large numpy ops.  Each per-point parameter accepts
+    either a scalar (shared by all points) or a length-P sequence.
+
+    Bit-for-bit equal to calling ``trace_from_indices`` per stream: the
+    degree math is row-independent (stacking only adds a leading axis the
+    kernel never mixes across), trailing partial waves keep the scalar
+    sentinel-padded path, and the tile/core round-robin is computed per
+    point exactly as before.
+    """
+    streams = [np.asarray(s).reshape(-1) for s in index_streams]
+    P = len(streams)
+    cores_l = _per_point(num_cores, P, "num_cores")
+    class_l = _per_point(job_class, P, "job_class")
+    wpt_l = _per_point(waves_per_tile, P, "waves_per_tile")
+    depth_l = _per_point(pipeline_depth, P, "pipeline_depth")
+    degrees: list = [None] * P
+    actives: list = [None] * P
+    by_length: dict = {}
+    for i, s in enumerate(streams):
+        by_length.setdefault(s.shape[0], []).append(i)
+    for n, members in by_length.items():
+        num_waves = max(1, -(-n // wave))
+        full = n // wave if wave % COMMIT_GROUP == 0 else 0
+        deg = np.empty((len(members), num_waves), np.float64)
+        act = np.empty((len(members), num_waves), np.float64)
+        if full:
+            stacked = np.stack(
+                [streams[i][:full * wave].reshape(full, wave)
+                 for i in members])
+            deg[:, :full] = _degrees_full_waves(stacked, COMMIT_GROUP)
+            act[:, :full] = wave
+        for row, i in enumerate(members):
+            s = streams[i]
+            for w in range(full, num_waves):
+                part = s[w * wave:(w + 1) * wave]
+                act[row, w] = part.shape[0]
+                deg[row, w] = wave_degree(part)
+            degrees[i] = deg[row].copy()
+            actives[i] = act[row].copy()
+    out = []
+    for i in range(P):
+        num_waves = degrees[i].shape[0]
+        tiles = np.arange(num_waves) // max(wpt_l[i], 1)
+        out.append(WaveTrace(
+            degree=degrees[i],
+            job_class=np.full(num_waves, class_l[i], np.int32),
+            core=(tiles % cores_l[i]).astype(np.int32),
+            lanes_active=actives[i],
+            waves_per_tile=wpt_l[i],
+            pipeline_depth=depth_l[i],
+        ))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +437,109 @@ class CounterSet:
                 occupancy=occ, n_true=n_true, core_id=core)
             for core in range(self.num_cores)
         ]
+
+
+def bitwise_equal(a: CounterSet, b: CounterSet,
+                  ignore: Sequence[str] = ()) -> bool:
+    """Exact field-by-field equality of two counter bundles.
+
+    Arrays must match in dtype, shape, and every bit; floats compare with
+    ``==`` (no tolerance).  This is the acceptance check for the batch
+    collection path: ``collect_batch(specs).row(i)`` must pass against
+    ``collect(specs[i])`` for every provider.  ``ignore`` names fields to
+    skip — callers comparing providers that *measure* (microbench) pass
+    ``("wall_time_s", "meta")``, since two wall-clock readings never
+    agree bit for bit even on the scalar path.
+    """
+    for field in dataclasses.fields(CounterSet):
+        if field.name in ignore:
+            continue
+        va = getattr(a, field.name)
+        vb = getattr(b, field.name)
+        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+            if not (isinstance(va, np.ndarray) and isinstance(vb, np.ndarray)):
+                return False
+            if va.dtype != vb.dtype or va.shape != vb.shape:
+                return False
+            if not np.array_equal(va, vb):
+                return False
+        elif va != vb:
+            return False
+    return True
+
+
+def countersets_from_traces(
+    traces: Sequence["WaveTrace"],
+    *,
+    labels: Sequence[str],
+    num_cores=1,
+    bytes_read=0.0,
+    flops=0.0,
+    overhead_cycles=500.0,
+    source: str = "trace",
+) -> list["CounterSet"]:
+    """Batch ``CounterSet.from_trace``: P wave traces -> P counter bundles.
+
+    Traces sharing a core-assignment pattern are aggregated as stacked
+    (P', W) columns — one masked row-sum per core for the whole group
+    instead of per-trace numpy calls, which is where a large sweep's
+    aggregation time actually goes.  Bit-identical to per-trace
+    ``from_trace``: rows with the same core pattern select the same wave
+    columns, and a row of the stacked masked sum / mean reduces the same
+    contiguous values in the same order as the scalar call.  Per-trace
+    parameters accept a scalar or a length-P sequence, as in
+    ``traces_from_index_batch``.
+    """
+    traces = list(traces)
+    P = len(traces)
+    labels = list(labels)
+    if len(labels) != P:
+        raise ValueError(f"{len(labels)} labels for {P} traces")
+    cores_l = _per_point(num_cores, P, "num_cores")
+    bytes_l = _per_point(bytes_read, P, "bytes_read")
+    flops_l = _per_point(flops, P, "flops")
+    ovh_l = _per_point(overhead_cycles, P, "overhead_cycles")
+    out: list = [None] * P
+    groups: dict = {}
+    for i, tr in enumerate(traces):
+        if tr.num_waves == 0:       # degenerate: keep the scalar reference
+            out[i] = CounterSet.from_trace(
+                traces[i], label=labels[i], num_cores=cores_l[i],
+                bytes_read=bytes_l[i], flops=flops_l[i],
+                overhead_cycles=ovh_l[i], source=source)
+            continue
+        key = (tr.num_waves, cores_l[i], tr.core.tobytes())
+        groups.setdefault(key, []).append(i)
+    for (num_waves, C, _), members in groups.items():
+        deg = np.stack([traces[i].degree for i in members])         # (P', W)
+        cls = np.stack([traces[i].job_class for i in members])
+        lanes = np.stack([traces[i].lanes_active for i in members])
+        core_pattern = traces[members[0]].core
+        O = np.zeros((len(members), C))
+        n_f = np.zeros((len(members), C))
+        n_c = np.zeros((len(members), C))
+        n_p = np.zeros((len(members), C))
+        for c in range(C):
+            sel = core_pattern == c
+            O[:, c] = np.sum(deg[:, sel], axis=1)
+            cls_sel = cls[:, sel]
+            n_f[:, c] = np.sum(cls_sel == timing.FAO, axis=1)
+            n_c[:, c] = np.sum(cls_sel == timing.CAS, axis=1)
+            n_p[:, c] = np.sum(cls_sel == timing.POPC, axis=1)
+        lanes_mean = np.mean(lanes, axis=1)
+        for row, i in enumerate(members):
+            tr = traces[i]
+            out[i] = CounterSet(
+                label=labels[i], source=source, num_cores=C,
+                O=O[row].copy(), N_f=n_f[row].copy(),
+                N_c=n_c[row].copy(), N_p=n_p[row].copy(),
+                lanes_active=float(lanes_mean[row]),
+                num_waves=tr.num_waves, waves_per_tile=tr.waves_per_tile,
+                pipeline_depth=tr.pipeline_depth,
+                bytes_read=bytes_l[i], flops=flops_l[i],
+                overhead_cycles=ovh_l[i],
+            )
+    return out
 
 
 # ---------------------------------------------------------------------------

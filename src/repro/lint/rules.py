@@ -220,23 +220,28 @@ def evaluate_target(target, session, *, models=None,
             hlo_uri=_source_uri(model), hlo_line=ksite.hlo_line,
             spec=spec_))
 
+    # baselines are plain index streams, so their trace synthesis is
+    # deferred and batched (one traces_from_index_batch call for the
+    # whole target) — the site traces themselves come from the symbolic
+    # derivation, which is already a few vectorized ops per site
+    baseline_streams: list = []
+    baseline_jobs: list = []
+
     def _queue_scored(rule, model, ksite, deriv, *, base_job, message_fn):
         trace = lan._trace_from_derivation(
             deriv, spec, job_class=job, waves_per_tile=wpt)
         n = deriv.stream.shape[0]
-        base_trace = counters_mod.trace_from_indices(
-            np.arange(n, dtype=np.int64), max(2, ksite.num_bins),
-            num_cores=cores, job_class=base_job, waves_per_tile=wpt,
-            pipeline_depth=pd)
         common = dict(num_cores=cores, bytes_read=spec.bytes_read,
                       flops=spec.flops,
                       overhead_cycles=spec.overhead_cycles, source="lint")
         csets.append(counters_mod.CounterSet.from_trace(
             trace, label=f"{target.label}/{ksite.op_name}", **common))
-        csets.append(counters_mod.CounterSet.from_trace(
-            base_trace, label=f"{target.label}/__baseline__", **common))
+        csets.append(None)  # baseline slot, filled by the batch below
+        baseline_streams.append(np.arange(n, dtype=np.int64))
+        baseline_jobs.append(base_job)
         scored.append(dict(rule=rule, model=model, ksite=ksite,
-                           deriv=deriv, message_fn=message_fn))
+                           deriv=deriv, message_fn=message_fn,
+                           common=common))
 
     for model in models:
         grid_axes = set(range(len(model.grid)))
@@ -350,6 +355,13 @@ def evaluate_target(target, session, *, models=None,
                             "`repro sweep` / `Session.profile`")
 
     if scored:
+        base_traces = counters_mod.traces_from_index_batch(
+            baseline_streams, num_cores=cores, job_class=baseline_jobs,
+            waves_per_tile=wpt, pipeline_depth=pd)
+        for i, tr in enumerate(base_traces):
+            csets[2 * i + 1] = counters_mod.CounterSet.from_trace(
+                tr, label=f"{target.label}/__baseline__",
+                **scored[i]["common"])
         profiles = session.profile_sets(csets)
         for i, cand in enumerate(scored):
             prof, base = profiles[2 * i], profiles[2 * i + 1]

@@ -213,13 +213,19 @@ def test_sweep_warm_cache_skips_collection(capsys, tmp_path, monkeypatch):
     from repro.analysis.providers.trace import TraceProvider
 
     calls = []
-    orig = TraceProvider.collect
+    orig_collect = TraceProvider.collect
+    orig_batch = TraceProvider.collect_batch
 
     def counting(self, spec, device):
         calls.append(spec.label)
-        return orig(self, spec, device)
+        return orig_collect(self, spec, device)
+
+    def counting_batch(self, specs, device, **kw):
+        calls.extend(s.label for s in specs)
+        return orig_batch(self, specs, device, **kw)
 
     monkeypatch.setattr(TraceProvider, "collect", counting)
+    monkeypatch.setattr(TraceProvider, "collect_batch", counting_batch)
     argv = ["sweep", "--size", "2^13", "--waves-per-tile", "4", "8",
             "--format", "csv", "--no-artifact"]
     rc, out1 = run_cli(argv, capsys)
@@ -408,13 +414,19 @@ def test_advise_warm_cache_skips_collection(capsys, tmp_path):
 
     calls = []
     orig = TraceProvider.collect
+    orig_batch = TraceProvider.collect_batch
 
     def counting(self, spec, device):
         calls.append(spec.label)
         return orig(self, spec, device)
 
+    def counting_batch(self, specs, device, **kw):
+        calls.extend(s.label for s in specs)
+        return orig_batch(self, specs, device, **kw)
+
     try:
         TraceProvider.collect = counting
+        TraceProvider.collect_batch = counting_batch
         argv = ADVISE_ARGV + ["--format", "json", "--no-artifact"]
         rc, out1 = run_cli(argv, capsys)
         assert rc == 0
@@ -432,6 +444,7 @@ def test_advise_warm_cache_skips_collection(capsys, tmp_path):
         assert warm["stats"]["disk_hits"] > 0
     finally:
         TraceProvider.collect = orig
+        TraceProvider.collect_batch = orig_batch
 
 
 def test_advise_rejects_multi_point(capsys):

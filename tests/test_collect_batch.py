@@ -1,0 +1,489 @@
+"""Columnar ``collect_batch`` + sharded sweep executor (the PR 8 surface).
+
+The load-bearing claims: (a) every shipped provider's ``collect_batch``
+rows are bit-for-bit equal to its scalar ``collect`` (modeled fields only
+for the measuring microbench backend), (b) ``Session``'s batch cache
+resolution makes O(groups) provider calls cold and zero warm, (c) a
+sharded sweep merging through the persistent ``SweepCache`` — including
+two writers racing on the *same* slice, in threads and in subprocesses —
+reassembles bit-identically to a single-process sweep, and (d) the cache
+CLI + argparse validation reject bad shard/jobs arguments up front.
+"""
+
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    CounterSet,
+    Session,
+    SweepCache,
+    WorkloadSpec,
+    register_provider,
+)
+from repro.analysis import device as device_mod
+from repro.analysis.providers import (
+    PROVIDERS,
+    collect_batch_fallback,
+    get_provider,
+    provider_collect_batch,
+)
+from repro.cli import main
+from repro.core import counters
+
+jnp = pytest.importorskip("jax.numpy")
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(autouse=True)
+def _isolate_results(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_RESULTS", str(tmp_path / "results"))
+    yield
+
+
+@pytest.fixture
+def sess(tmp_path):
+    device_mod._TABLE_MEMO.clear()
+    return Session("v5e", cache_dir=tmp_path)
+
+
+def _indices(n=4 * 1024, num_bins=256, seed=0):
+    return np.random.default_rng(seed).integers(0, num_bins, n)
+
+
+def _grid(points=8, n=2048, seed=0):
+    """A grid of *distinct-content* specs (nothing memoizes away)."""
+    rng = np.random.default_rng(seed)
+    return [WorkloadSpec.from_indices(rng.integers(0, 256, n), 256,
+                                      label=f"pt{i}", waves_per_tile=4)
+            for i in range(points)]
+
+
+def run_cli(argv, capsys):
+    rc = main(argv)
+    return rc, capsys.readouterr().out
+
+
+# -- the batched degree kernel ------------------------------------------------
+
+
+def test_degrees_batch_axis_matches_per_row_and_wave_degree():
+    rng = np.random.default_rng(1)
+    idx = rng.integers(0, 64, size=(5, 7, counters.LANES))
+    batch = counters._degrees_full_waves(idx, counters.COMMIT_GROUP)
+    assert batch.shape == (5, 7)
+    for p in range(5):
+        row = counters._degrees_full_waves(idx[p], counters.COMMIT_GROUP)
+        np.testing.assert_array_equal(batch[p], row)
+        for w in range(7):
+            assert batch[p, w] == counters.wave_degree(idx[p, w])
+
+
+def test_degrees_independent_of_chunking():
+    rng = np.random.default_rng(2)
+    idx = rng.integers(0, 8, size=(100, counters.LANES))
+    a = counters._degrees_full_waves(idx, counters.COMMIT_GROUP, chunk=7)
+    b = counters._degrees_full_waves(idx, counters.COMMIT_GROUP, chunk=4096)
+    np.testing.assert_array_equal(a, b)
+
+
+# -- per-provider batch-vs-scalar bitwise equality ----------------------------
+
+
+def test_trace_collect_batch_bitwise_equal_scalar(sess):
+    p = get_provider("trace")
+    specs = [
+        WorkloadSpec.from_indices(_indices(4096, seed=1), 256, label="a",
+                                  waves_per_tile=4),
+        WorkloadSpec.from_indices(_indices(3000, seed=2), 256, label="b",
+                                  waves_per_tile=2),   # partial trailing wave
+        WorkloadSpec.from_indices(_indices(4096, seed=3), 256, label="c",
+                                  waves_per_tile=8, pipeline_depth=4),
+        WorkloadSpec.from_indices(np.zeros(2048, np.int64), 16, label="d"),
+    ]
+    frame = p.collect_batch(specs, sess.device)
+    assert len(frame) == len(specs)
+    for i, spec in enumerate(specs):
+        scalar = p.collect(spec, sess.device)
+        assert counters.bitwise_equal(frame.row(i), scalar), spec.label
+    assert frame.labels == ["a", "b", "c", "d"]
+
+
+def test_trace_collect_batch_kernel_source_specs(sess):
+    """Kernel-backed specs batch through the synthesized committed stream."""
+    from repro.data.images import make_image
+
+    p = get_provider("trace")
+    specs = [
+        WorkloadSpec.from_histogram(jnp.asarray(make_image("uniform", 2048)),
+                                    label="hist", force_fao=True),
+        WorkloadSpec.from_histogram(jnp.asarray(make_image("solid", 2048)),
+                                    label="hist2", variant="hist2",
+                                    force_fao=True),
+        WorkloadSpec.from_scatter_add(
+            _indices(2048, 128, seed=4).astype(np.int32),
+            np.ones((2048, 1), np.float32), 128, label="scat"),
+        WorkloadSpec.from_indices(_indices(2048, seed=5), 256, label="idx"),
+    ]
+    frame = p.collect_batch(specs, sess.device)
+    for i, spec in enumerate(specs):
+        assert counters.bitwise_equal(frame.row(i),
+                                      p.collect(spec, sess.device)), \
+            spec.label
+
+
+def test_kernel_provider_batch_matches_scalar(sess):
+    p = get_provider("kernel")
+    specs = [WorkloadSpec.from_indices(_indices(2048, seed=s), 256,
+                                       label=f"k{s}", waves_per_tile=2)
+             for s in (1, 2)]
+    frame = p.collect_batch(specs, sess.device)
+    for i, spec in enumerate(specs):
+        assert counters.bitwise_equal(frame.row(i),
+                                      p.collect(spec, sess.device))
+
+
+def test_hlo_provider_batch_matches_scalar(sess):
+    import jax
+
+    f = jax.jit(lambda a: (a @ a).sum())
+    a = jnp.ones((64, 64), jnp.float32)
+    text = f.lower(a).compile().as_text()
+    p = get_provider("hlo")
+    specs = [WorkloadSpec.from_compiled(hlo_text=text, label="m1"),
+             WorkloadSpec.from_compiled(hlo_text=text, label="m2",
+                                        bytes_read=1e9)]
+    frame = p.collect_batch(specs, sess.device)
+    for i, spec in enumerate(specs):
+        assert counters.bitwise_equal(frame.row(i),
+                                      p.collect(spec, sess.device))
+
+
+def test_microbench_batch_fills_wall_time_and_matches_modeled(sess):
+    p = get_provider("microbench")
+    specs = [WorkloadSpec.from_indices(_indices(2048, seed=s), 256,
+                                       label=f"mb{s}", waves_per_tile=4)
+             for s in (1, 2)]
+    frame = p.collect_batch(specs, sess.device)
+    for i, spec in enumerate(specs):
+        row = frame.row(i)
+        assert row.wall_time_s is not None and row.wall_time_s > 0
+        assert row.meta.get("busy_cycles_measured")
+        # the clock can never repeat; every modeled field must
+        scalar = p.collect(spec, sess.device)
+        assert counters.bitwise_equal(row, scalar,
+                                      ignore=("wall_time_s", "meta"))
+
+
+def test_countersets_from_traces_multicore_bitwise():
+    """The stacked per-core aggregation vs scalar from_trace, cores > 1."""
+    traces, refs = [], []
+    for seed, cores in ((1, 4), (2, 4), (3, 4)):
+        tr = counters.trace_from_indices(
+            _indices(8 * 1024, seed=seed), 256, num_cores=cores,
+            waves_per_tile=2)
+        traces.append(tr)
+        refs.append(CounterSet.from_trace(tr, label=f"t{seed}",
+                                          num_cores=cores, bytes_read=4.0))
+    got = counters.countersets_from_traces(
+        traces, labels=["t1", "t2", "t3"], num_cores=4, bytes_read=4.0)
+    for g, r in zip(got, refs):
+        assert counters.bitwise_equal(g, r)
+
+
+# -- dispatch helpers ---------------------------------------------------------
+
+
+class _Counting:
+    """Collect-only provider (no collect_batch): the fallback contract."""
+
+    name = "counting-batch-test"
+
+    def __init__(self):
+        self.calls = []
+
+    def collect(self, spec, device):
+        self.calls.append(spec.label)
+        return CounterSet(label=spec.label, source=self.name, num_cores=1,
+                          O=np.array([8.0]), N_f=np.array([4.0]),
+                          num_waves=4, waves_per_tile=4)
+
+
+def test_collect_batch_fallback_loops_scalar_collect(sess):
+    prov = _Counting()
+    specs = [WorkloadSpec.from_indices(_indices(2048, seed=s), 256,
+                                       label=f"s{s}") for s in range(3)]
+    frame = collect_batch_fallback(prov, specs, sess.device)
+    assert prov.calls == ["s0", "s1", "s2"]
+    assert frame.labels == ["s0", "s1", "s2"]
+    with pytest.raises(ValueError, match="at least one spec"):
+        collect_batch_fallback(prov, [], sess.device)
+
+
+def test_provider_collect_batch_dispatches_by_capability(sess):
+    spec = WorkloadSpec.from_indices(_indices(2048), 256, label="x")
+    prov = _Counting()
+    frame = provider_collect_batch(prov, [spec], sess.device)
+    assert prov.calls == ["x"]          # no collect_batch -> fallback loop
+    trace = get_provider("trace")
+    frame2 = provider_collect_batch(trace, [spec], sess.device)
+    assert counters.bitwise_equal(frame2.row(0),
+                                  trace.collect(spec, sess.device))
+    assert len(frame) == len(frame2) == 1
+
+
+# -- Session batch resolution + stats -----------------------------------------
+
+
+def test_cold_sweep_one_batch_call_warm_sweep_zero(tmp_path):
+    cache = tmp_path / "cache"
+    specs = _grid(6)
+    cold = Session("v5e", persistent_cache=str(cache))
+    cold.sweep(specs)
+    assert cold.stats == {"collected": 6, "memo_hits": 0, "disk_hits": 0,
+                          "batch_calls": 1}
+    warm = Session("v5e", persistent_cache=str(cache))
+    warm.sweep(specs)
+    assert warm.stats == {"collected": 0, "memo_hits": 0, "disk_hits": 6,
+                          "batch_calls": 0}
+
+
+def test_mixed_num_cores_sweep_one_batch_per_group(tmp_path):
+    specs = [WorkloadSpec.from_indices(_indices(2048, seed=s), 256,
+                                       label=f"c{cores}-{s}",
+                                       num_cores=cores, waves_per_tile=2)
+             for cores in (1, 2) for s in range(3)]
+    sess = Session("v5e")
+    result = sess.sweep(specs)
+    assert sess.stats["batch_calls"] == 2       # one per num_cores group
+    assert sess.stats["collected"] == 6
+    assert len(result) == 6
+    # row order matches input order despite the regrouping
+    assert [p.label for p in result.profiles] == [s.label for s in specs]
+    for spec, prof in zip(specs, result.profiles):
+        direct = Session("v5e").profile(spec)
+        assert prof.scatter_utilization == direct.scatter_utilization
+
+
+def test_validate_reports_batch_bitwise_equal(sess):
+    spec = WorkloadSpec.from_indices(_indices(2048), 256, label="v",
+                                     waves_per_tile=2)
+    report = sess.validate(spec, providers=("trace", "kernel"))
+    assert all(c.batch_bitwise_equal is True for c in report.comparisons)
+    text = report.render("text")
+    assert "batch collection bit-identical: trace, kernel" in text
+    assert "MISMATCH" not in text
+
+
+def test_validate_collect_only_provider_has_no_batch_verdict(sess):
+    register_provider(_Counting())
+    try:
+        spec = WorkloadSpec.from_indices(_indices(2048), 256, label="v")
+        report = sess.validate(
+            spec, providers=("trace", "counting-batch-test"))
+        by_name = {c.provider: c for c in report.comparisons}
+        assert by_name["trace"].batch_bitwise_equal is True
+        assert by_name["counting-batch-test"].batch_bitwise_equal is None
+        assert ("batch collection bit-identical: trace"
+                in report.render("text"))
+    finally:
+        del PROVIDERS["counting-batch-test"]
+
+
+# -- sharded sweeps -----------------------------------------------------------
+
+
+def test_sweep_shard_validation():
+    sess = Session("v5e")
+    specs = _grid(4)
+    with pytest.raises(ValueError, match="shards must be >= 1"):
+        sess.sweep(specs, shards=0)
+    with pytest.raises(ValueError, match="shard_index"):
+        sess.sweep(specs, shards=2, shard_index=2)
+    with pytest.raises(ValueError, match="owns no points"):
+        sess.sweep(specs, shards=8, shard_index=5)
+
+
+def test_two_shard_merge_bit_identical_to_single_sweep(tmp_path):
+    specs = _grid(9)
+    direct = Session("v5e").sweep(specs)
+    cache = tmp_path / "cache"
+    for i in range(2):
+        shard_sess = Session("v5e", persistent_cache=str(cache))
+        result = shard_sess.sweep(specs, shards=2, shard_index=i)
+        assert [p.label for p in result.profiles] \
+            == [s.label for s in specs[i::2]]
+    merge_sess = Session("v5e", persistent_cache=str(cache))
+    merged = merge_sess.sweep(specs)
+    assert merge_sess.stats["collected"] == 0
+    assert merge_sess.stats["disk_hits"] == 9
+    assert merged.render("json") == direct.render("json")
+    for a, b in zip(merged.profiles, direct.profiles):
+        assert a.scatter_utilization == b.scatter_utilization
+        np.testing.assert_array_equal(a.T_cycles, b.T_cycles)
+
+
+def test_concurrent_same_slice_writers_threads(tmp_path):
+    """Two SweepCache instances racing on the SAME grid slice.
+
+    Atomic tmp+rename writes mean the last writer wins per entry and no
+    reader ever sees a torn file: afterwards the cache is complete,
+    every entry loads, and a warm merge is bit-identical to a direct
+    sweep.
+    """
+    specs = _grid(8)
+    root = tmp_path / "cache"
+    errors = []
+
+    def racer():
+        try:
+            Session("v5e",
+                    persistent_cache=SweepCache(root)).sweep(specs)
+        except Exception as exc:          # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=racer) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    cache = SweepCache(root)
+    assert cache.stats()["entries"] == 8
+    loaded = [cset for _, cset in cache.iter_entries()]
+    assert len(loaded) == 8 and all(c is not None for c in loaded)
+    warm = Session("v5e", persistent_cache=SweepCache(root))
+    merged = warm.sweep(specs)
+    assert warm.stats["collected"] == 0
+    assert merged.render("json") == Session("v5e").sweep(specs).render("json")
+
+
+def test_concurrent_shard_subprocesses_merge_bit_identical(tmp_path):
+    """Two ``python -m repro sweep`` processes racing on the same shard,
+    sharing one REPRO_RESULTS cache; then --merge == --no-cache."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_RESULTS=str(tmp_path / "results"))
+    argv = [sys.executable, "-m", "repro", "sweep", "--size", "2^13",
+            "--waves-per-tile", "4", "8", "--format", "csv",
+            "--no-artifact"]
+    procs = [subprocess.Popen(
+        argv + ["--shards", "2", "--shard-index", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        cwd=REPO, env=env) for _ in range(2)]
+    for p in procs:
+        out, err = p.communicate(timeout=240)
+        assert p.returncode == 0, err
+    run = lambda extra: subprocess.run(  # noqa: E731
+        argv + extra, capture_output=True, text=True, cwd=REPO, env=env,
+        timeout=240)
+    second = run(["--shards", "2", "--shard-index", "1"])
+    assert second.returncode == 0, second.stderr
+    merged = run(["--merge"])
+    direct = run(["--no-cache"])
+    assert merged.returncode == 0 and direct.returncode == 0
+    assert merged.stdout == direct.stdout
+    text = subprocess.run(
+        argv[:-3] + ["--format", "text", "--no-artifact", "--merge"],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=240)
+    assert text.returncode == 0, text.stderr
+    assert "cache: 0 collected" in text.stdout
+
+
+# -- SweepCache maintenance ---------------------------------------------------
+
+
+def _fill_cache(root, n=4):
+    cache = SweepCache(root)
+    for i in range(n):
+        cset = CounterSet(label=f"e{i}", source="trace", num_cores=1,
+                          O=np.array([float(i)]), N_f=np.array([1.0]),
+                          num_waves=2)
+        cache.put(cache.key("trace", f"fp{i}", "tbl"), cset)
+    return cache
+
+
+def test_sweep_cache_stats_and_prune(tmp_path):
+    cache = _fill_cache(tmp_path / "c", n=4)
+    stats = cache.stats()
+    assert stats["entries"] == 4 and stats["bytes"] > 0
+    assert stats["by_provider"]["trace"]["entries"] == 4
+    removed, freed = cache.prune(max_bytes=0)
+    assert removed == 4 and freed == stats["bytes"]
+    assert cache.stats()["entries"] == 0
+    with pytest.raises(ValueError):
+        cache.prune(max_bytes=-1)
+
+
+def test_sweep_cache_prune_evicts_oldest_first(tmp_path):
+    cache = _fill_cache(tmp_path / "c", n=3)
+    entries = sorted((p for p, _ in cache.iter_entries()),
+                     key=lambda p: p.stat().st_mtime)
+    # age the first entry far into the past; keep the rest fresh
+    old = entries[0]
+    os.utime(old, (1, 1))
+    total = cache.stats()["bytes"]
+    removed, _ = cache.prune(max_bytes=total - 1)   # must evict exactly one
+    assert removed == 1
+    assert not old.exists()
+    assert cache.stats()["entries"] == 2
+
+
+# -- CLI: cache subcommand + argument validation ------------------------------
+
+
+def test_cli_cache_stats_text_and_json(capsys, tmp_path):
+    rc, _ = run_cli(["sweep", "--size", "2^13", "--waves-per-tile", "4",
+                     "8", "--format", "csv", "--no-artifact"], capsys)
+    assert rc == 0
+    rc, out = run_cli(["cache", "stats"], capsys)
+    assert rc == 0
+    assert "cache root:" in out and "2 entries" in out
+    assert "trace" in out
+    rc, out = run_cli(["cache", "stats", "--format", "json"], capsys)
+    assert rc == 0
+    import json
+    stats = json.loads(out)
+    assert stats["entries"] == 2
+    assert stats["by_provider"]["trace"]["entries"] == 2
+
+
+def test_cli_cache_prune_and_clear(capsys):
+    rc, _ = run_cli(["sweep", "--size", "2^13", "--waves-per-tile", "4",
+                     "8", "--format", "csv", "--no-artifact"], capsys)
+    assert rc == 0
+    rc, out = run_cli(["cache", "prune", "--max-bytes", "0"], capsys)
+    assert rc == 0 and "pruned 2 entries" in out
+    rc, out = run_cli(["cache", "clear"], capsys)
+    assert rc == 0 and "removed 0 cache entries" in out
+
+
+@pytest.mark.parametrize("argv", [
+    ["sweep", "--size", "2^13", "--shards", "0"],
+    ["sweep", "--size", "2^13", "--shards", "-2"],
+    ["sweep", "--size", "2^13", "--shard-index", "-1"],
+    ["sweep", "--size", "2^13", "--shards", "2", "--shard-index", "2"],
+    ["sweep", "--size", "2^13", "--jobs", "0"],
+    ["sweep", "--size", "2^13", "--merge", "--no-cache"],
+    ["sweep", "--size", "2^13", "--merge", "--shards", "2"],
+    ["sweep", "--size", "2^13", "--merge", "--shards", "2",
+     "--shard-index", "1"],
+    ["advise", "--size", "2^13", "--jobs", "0"],
+    ["cache", "prune"],                      # prune needs --max-bytes
+    ["cache", "prune", "--max-bytes", "-5"],
+])
+def test_cli_rejects_bad_arguments_up_front(argv):
+    with pytest.raises(SystemExit) as exc:
+        main(argv)
+    assert exc.value.code == 2
+
+
+def test_cli_shard_index_alone_defaults_shards_error():
+    # --shard-index without --shards (shards=1) is out of range for i>=1
+    with pytest.raises(SystemExit) as exc:
+        main(["sweep", "--size", "2^13", "--shard-index", "1"])
+    assert exc.value.code == 2

@@ -215,7 +215,8 @@ def test_derived_counters_bitwise_equal_trace_provider(variant):
         else:
             assert a == b, field
     # the whole derivation ran zero collections
-    assert sess.stats == {"collected": 0, "memo_hits": 0, "disk_hits": 0}
+    assert sess.stats == {"collected": 0, "memo_hits": 0, "disk_hits": 0,
+                          "batch_calls": 0}
 
 
 def test_degree_floor_separates_hist_from_hist2():

@@ -324,7 +324,8 @@ def test_session_rejects_nothing_and_keeps_memo_priority(tmp_path, sess):
     s = Session("v5e", table=sess.table, persistent_cache=tmp_path / "c")
     s.profile(spec)
     s.profile(spec.with_(label="m2"))
-    assert s.stats == {"collected": 1, "memo_hits": 1, "disk_hits": 0}
+    assert s.stats == {"collected": 1, "memo_hits": 1, "disk_hits": 0,
+                       "batch_calls": 1}
 
 
 def test_single_pass_profile_counters_matches_dataclass_fields(sess):
