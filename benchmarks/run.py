@@ -31,6 +31,11 @@ Prints ``name,us_per_call,derived`` CSV rows (spec format):
                                 frontier, zero scalar profiling, warm
                                 cache re-advise collects nothing
                                 (CI gate via --advise-gate)
+  * service_load              — profiling-service burst load: cold and
+                                warm req/s, warm-hit p50/p99 latency,
+                                and breaker-trip recovery under
+                                injected faults
+                                (CI gate via --service-gate)
   * kernel_walltime           — interpret-mode Pallas kernel wall times
                                 (regression canary; not TPU numbers)
   * roofline_table            — per (arch x shape x mesh) terms from the
@@ -488,6 +493,112 @@ def advise_search() -> None:
          f"warm_collected={warm_sess.stats['collected']}")
 
 
+LAST_SERVICE: dict | None = None
+
+
+def service_load() -> None:
+    """Profiling-service load test (PR 9).
+
+    Drives an in-process ``ProfilingService`` (the exact object behind
+    ``repro serve``, minus the HTTP socket) through three phases: a cold
+    48-job profile burst from 8 client threads (req/s), the same burst
+    warm (per-job p50/p99 — every point must be a memo hit, zero new
+    provider batches), and a breaker-trip/recovery cycle driven through
+    ``FaultInjectionProvider.configure`` — fault_rate=1.0 on fresh specs
+    until the primary breaker opens (requests keep answering 200, just
+    degraded onto the fallback), then 0.0 and measure the time until the
+    first non-degraded response.  ``--service-gate`` turns the
+    invariants — never a non-200, zero warm collections, the breaker
+    actually tripped, recovery after the faults clear, and a generous
+    warm-p99 bound — into a CI gate.
+    """
+    import concurrent.futures
+
+    from repro.service import ProfilingService, ServiceConfig
+
+    def job(size_log2: int, seed: int) -> dict:
+        return {"kind": "profile", "device": "v5e",
+                "workload": {"workload": "indices", "size": 1 << size_log2,
+                             "dist": "uniform", "seed": seed,
+                             "waves_per_tile": 8}}
+
+    burst = [job(10 + (i % 3), i) for i in range(48)]
+    # nonzero construction-time rate so the fault wrapper exists at all;
+    # zeroed before any measurement, then driven via configure()
+    cfg = ServiceConfig(workers=4, queue_depth=64, retries=1,
+                        backoff_base_s=0.001, call_timeout_s=5.0,
+                        breaker_threshold=3, breaker_cooldown_s=0.2,
+                        persistent_cache=False, fault_rate=0.5,
+                        fault_seed=0)
+    statuses: list[int] = []
+
+    with ProfilingService(cfg) as svc, \
+            concurrent.futures.ThreadPoolExecutor(8) as pool:
+        svc.fault.configure(fault_rate=0.0)
+
+        def run(payload):
+            t0 = time.perf_counter()
+            status, body = svc.handle(payload)
+            return status, body, (time.perf_counter() - t0) * 1e3
+
+        t0 = time.perf_counter()
+        cold = list(pool.map(run, burst))
+        cold_s = time.perf_counter() - t0
+        statuses += [s for s, _, _ in cold]
+
+        stats0 = svc.session("v5e").stats_snapshot()
+        t0 = time.perf_counter()
+        warm = list(pool.map(run, burst))
+        warm_s = time.perf_counter() - t0
+        statuses += [s for s, _, _ in warm]
+        warm_batches = (svc.session("v5e").stats_snapshot()["batch_calls"]
+                        - stats0["batch_calls"])
+        p50, p99 = np.percentile([ms for _, _, ms in warm], [50, 99])
+
+        # trip the primary's breaker: every attempt faults, so each
+        # fresh (unmemoized) spec degrades onto the fallback and the
+        # consecutive-failure count crosses breaker_threshold=3 within
+        # two jobs at retries=1
+        svc.fault.configure(fault_rate=1.0)
+        trip = [run(job(10, 1000 + i)) for i in range(6)]
+        statuses += [s for s, _, _ in trip]
+        degraded = sum(bool(b.get("degraded")) for _, b, _ in trip)
+        tripped = any(st["state"] == "open"
+                      for st in svc.provider.breaker_states().values())
+
+        svc.fault.configure(fault_rate=0.0)
+        t0 = time.perf_counter()
+        recovered = False
+        recovery_ms = float("nan")
+        for i in range(50):
+            status, body, _ = run(job(10, 2000 + i))
+            statuses.append(status)
+            if status == 200 and not body["degraded"]:
+                recovered = True
+                recovery_ms = (time.perf_counter() - t0) * 1e3
+                break
+            time.sleep(cfg.breaker_cooldown_s / 2)
+
+    global LAST_SERVICE
+    LAST_SERVICE = {
+        "not_200": sum(s != 200 for s in statuses),
+        "warm_batches": int(warm_batches),
+        "warm_p99_ms": float(p99),
+        "tripped": tripped,
+        "degraded_under_faults": degraded,
+        "recovered": recovered,
+    }
+    emit("service_load_48job", warm_s / len(burst) * 1e6,
+         f"req_per_s_cold={len(burst) / cold_s:.1f};"
+         f"req_per_s_warm={len(burst) / warm_s:.1f};"
+         f"warm_p50_ms={p50:.2f};warm_p99_ms={p99:.2f};"
+         f"warm_batches={warm_batches};"
+         f"not_200={LAST_SERVICE['not_200']};"
+         f"breaker_tripped={int(tripped)};"
+         f"degraded_under_faults={degraded};"
+         f"recovery_ms={recovery_ms:.0f}")
+
+
 def kernel_walltime() -> None:
     img = jnp.asarray(make_image("uniform", 1 << 16))
     us = _timeit(lambda: hist_ops.histogram(img).block_until_ready())
@@ -530,7 +641,8 @@ def roofline_table() -> None:
 ALL = [fig1_service_time_table, fig3_utilization_sweep, fig4_popc_vs_fao,
        fig5_reorder_speedup, sec5_model_vs_measured, lint_static_vs_trace,
        moe_dispatch_profile, sweep_grid_parallel, profile_batch_vs_loop,
-       collect_batch_vs_loop, advise_search, kernel_walltime, roofline_table]
+       collect_batch_vs_loop, advise_search, service_load, kernel_walltime,
+       roofline_table]
 
 
 def main() -> None:
@@ -545,6 +657,12 @@ def main() -> None:
                          "measures less than this batch-vs-scalar "
                          "collection speedup, or its warm merged re-sweep "
                          "collected anything")
+    ap.add_argument("--service-gate", action="store_true",
+                    help="CI gate: exit 1 unless service_load answered "
+                         "every request with 200 (warm hits collecting "
+                         "nothing, warm p99 under 500ms), tripped the "
+                         "primary breaker under injected faults, and "
+                         "recovered once the faults cleared")
     ap.add_argument("--advise-gate", action="store_true",
                     help="CI gate: exit 1 unless advise_search scored its "
                          "32-candidate frontier via one batch evaluation "
@@ -590,6 +708,36 @@ def main() -> None:
                   f"{LAST_COLLECT_WARM} point(s), expected 0 — shard "
                   f"results are not merging through the persistent cache",
                   file=sys.stderr)
+            sys.exit(1)
+    if args.service_gate:
+        import sys
+        if LAST_SERVICE is None:
+            print("error: --service-gate set but service_load did not run",
+                  file=sys.stderr)
+            sys.exit(2)
+        s = LAST_SERVICE
+        problems = []
+        if s["not_200"]:
+            problems.append(f"{s['not_200']} non-200 response(s), "
+                            f"expected none")
+        if s["warm_batches"]:
+            problems.append(f"warm burst issued {s['warm_batches']} "
+                            f"provider batch(es), expected 0 (memo miss)")
+        if s["warm_p99_ms"] >= 500.0:
+            problems.append(f"warm p99 {s['warm_p99_ms']:.0f}ms over the "
+                            f"500ms bound")
+        if not s["tripped"]:
+            problems.append("primary breaker never opened under "
+                            "fault_rate=1.0")
+        if not s["degraded_under_faults"]:
+            problems.append("no degraded responses while faults were "
+                            "injected — the fallback chain did not engage")
+        if not s["recovered"]:
+            problems.append("no non-degraded response after faults "
+                            "cleared — breaker never re-closed")
+        if problems:
+            print("error: service_load gate failed: "
+                  + "; ".join(problems), file=sys.stderr)
             sys.exit(1)
     if args.advise_gate:
         import sys

@@ -29,12 +29,26 @@ from repro.analysis.providers import (  # noqa: F401
     PROVIDERS,
     CounterProvider,
     CounterSet,
+    FaultInjectionProvider,
     HloProvider,
+    InjectedFault,
     InstrumentedKernelProvider,
     MicrobenchProvider,
     TraceProvider,
     get_provider,
     register_provider,
+)
+from repro.analysis.resilience import (  # noqa: F401
+    CircuitBreaker,
+    CorruptCounterError,
+    Deadline,
+    DeadlineExceeded,
+    ProviderCallTimeout,
+    ResilienceExhausted,
+    ResilientProvider,
+    RetryPolicy,
+    TransientProviderError,
+    resilience_scope,
 )
 from repro.analysis.render import (  # noqa: F401
     rows_to_csv,

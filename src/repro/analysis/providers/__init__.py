@@ -17,6 +17,10 @@ from repro.analysis.providers.base import (  # noqa: F401
     provider_collect_batch,
     register_provider,
 )
+from repro.analysis.providers.fault import (  # noqa: F401
+    FaultInjectionProvider,
+    InjectedFault,
+)
 from repro.analysis.providers.hlo import HloProvider  # noqa: F401
 from repro.analysis.providers.kernel import (  # noqa: F401
     InstrumentedKernelProvider,

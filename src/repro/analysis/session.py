@@ -315,9 +315,8 @@ class Session:
         A single point is just a one-row ``CounterFrame`` through the
         same columnar batch path sweeps use.
         """
-        prof = self._profile_batch(self.collect_cached_batch([spec]))[0]
-        self._last = self._as_result([spec], [prof])
-        return prof
+        self._last = self.analyze([spec])
+        return self._last.profiles[0]
 
     def classify(self, spec: WorkloadSpec) -> bottleneck.BottleneckVerdict:
         """Spec straight to verdict (the paper's 'immediately determine')."""
@@ -364,10 +363,27 @@ class Session:
                 raise ValueError(
                     f"shard {shard_index}/{shards} owns no points — the "
                     f"grid is smaller than the shard count")
-        csets = self.collect_cached_batch(specs, parallel=parallel)
-        profiles = self._profile_batch(csets)
-        self._last = self._as_result(specs, profiles)
+        self._last = self.analyze(specs, parallel=parallel)
         return self._last
+
+    def analyze(self, specs: Sequence[WorkloadSpec], *,
+                parallel: Optional[int] = None) -> SweepResult:
+        """``sweep``'s pipeline without touching session-wide report state.
+
+        Collection and model evaluation exactly as ``sweep`` runs them
+        (memo + persistent cache + batch providers, then one columnar
+        ``profile_batch`` pass per core-count group), but the result is
+        only *returned* — ``last``/``report()`` are untouched.  This is
+        the entry point for concurrent callers sharing one session (the
+        ``repro.service`` worker pool): the memo and stats are
+        lock-protected, and with no ``_last`` mutation two jobs can run
+        through the same session without racing each other's reports.
+        """
+        specs = list(specs)
+        if not specs:
+            raise ValueError("analyze() needs at least one WorkloadSpec")
+        csets = self.collect_cached_batch(specs, parallel=parallel)
+        return self._as_result(specs, self._profile_batch(csets))
 
     def advise(self, spec: WorkloadSpec, *, catalog=None, depth: int = 2,
                beam_width: int = 8, top_k: int = 5, validate_top: int = 0,
@@ -506,6 +522,12 @@ class Session:
     def last(self) -> Optional[SweepResult]:
         return self._last
 
+    def stats_snapshot(self) -> dict:
+        """Point-in-time copy of the collection accounting, taken under
+        the memo lock (the /status endpoint's consistent read)."""
+        with self._memo_lock:
+            return dict(self.stats)
+
     def report(self, fmt: str = "text") -> str:
         """Render the most recent profile()/sweep() result."""
         if self._last is None:
@@ -609,7 +631,13 @@ class Session:
                 cset = frame.row(row)
                 with self._memo_lock:
                     self._collect_memo[(self.provider.name, fp)] = cset
-                if disk_key is not None:
+                # degraded counters (a resilient provider's fallback or
+                # stale result) stay out of the persistent cache: under
+                # the primary's key they would masquerade as its numbers
+                # for every future process.  The in-process memo keeps
+                # them (warm resubmission still collects nothing), and
+                # the meta stamp survives so reports stay honest.
+                if disk_key is not None and not cset.meta.get("degraded"):
                     write_back[disk_key] = cset
                 out[i] = dataclasses.replace(cset, label=specs[i].label)
             if write_back:

@@ -161,14 +161,50 @@ class SweepCache:
     def path(self, key: str) -> Path:
         return self.root / f"{key}.npz"
 
+    def _glob(self, pattern: str) -> list:
+        """Directory listing that treats a vanished root as empty.
+
+        A concurrent ``clear()``/``rm -rf results/cache`` (or a racing
+        prune in another process) can delete the root between an
+        ``exists()`` check and the scan; every maintenance surface
+        resolves its file list through here so that race reads as an
+        empty cache, never a crash.
+        """
+        try:
+            return sorted(self.root.glob(pattern))
+        except OSError:
+            return []
+
+    def _quarantine(self, path: Path) -> None:
+        """Move a corrupt entry aside as ``<name>.npz.corrupt``.
+
+        A corrupt entry left in place would be re-read (and re-fail) on
+        every future lookup — a permanent per-request tax.  Renaming it
+        turns the corruption into a one-time event: the key reads as a
+        clean miss, the next collection overwrites it, and the evidence
+        survives for ``cache stats`` (``quarantined``) until ``cache
+        prune`` deletes it.  Rename races with other readers or a
+        concurrent clear are benign (first mover wins).
+        """
+        try:
+            path.rename(path.with_name(path.name + ".corrupt"))
+        except OSError:
+            pass
+
     def get(self, key: str) -> Optional[CounterSet]:
-        """Cached CounterSet, or ``None`` (missing or unreadable = miss)."""
+        """Cached CounterSet, or ``None`` (missing or unreadable = miss).
+
+        An unreadable-but-present entry is quarantined (see
+        ``_quarantine``) instead of being left to fail again forever.
+        """
         path = self.path(key)
-        if not path.exists():
-            return None
         try:
             return load_counter_set(path)
+        except FileNotFoundError:
+            return None
         except Exception:
+            if path.exists():
+                self._quarantine(path)
             return None
 
     def put(self, key: str, cset: CounterSet) -> None:
@@ -198,11 +234,11 @@ class SweepCache:
         """Yield ``(path, CounterSet | None)`` per on-disk entry
         (``None`` marks a corrupt/unreadable one), in stable path order —
         the shard-merge and maintenance iteration surface."""
-        if not self.root.exists():
-            return
-        for f in sorted(self.root.glob("*.npz")):
+        for f in self._glob("*.npz"):
             try:
                 yield f, load_counter_set(f)
+            except FileNotFoundError:
+                continue    # vanished mid-iteration (concurrent clear)
             except Exception:
                 yield f, None
 
@@ -211,13 +247,19 @@ class SweepCache:
 
         The provider is recovered from each entry's stored ``source``
         field (keys are opaque hashes); unreadable entries are counted
-        under ``"<corrupt>"`` so the report never hides them.
+        under ``"<corrupt>"`` and quarantined ``*.npz.corrupt`` files
+        under ``quarantined``, so the report never hides either.  Files
+        vanishing mid-scan (a concurrent ``clear()``) are skipped, and a
+        deleted cache root reads as an empty cache.
         """
         entries = 0
         total_bytes = 0
         by_provider: dict[str, dict] = {}
         for path, cset in self.iter_entries():
-            size = path.stat().st_size
+            try:
+                size = path.stat().st_size
+            except OSError:
+                continue    # vanished between listing and stat
             entries += 1
             total_bytes += size
             source = cset.source if cset is not None else "<corrupt>"
@@ -226,30 +268,45 @@ class SweepCache:
             bucket["bytes"] += size
         return {"root": str(self.root), "entries": entries,
                 "bytes": total_bytes,
+                "quarantined": len(self._glob("*.npz.corrupt")),
                 "by_provider": dict(sorted(by_provider.items()))}
 
-    def prune(self, max_bytes: int) -> tuple[int, int]:
-        """LRU-by-mtime eviction down to at most ``max_bytes`` on disk.
+    def prune(self, max_bytes: Optional[int] = None) -> tuple[int, int]:
+        """Delete quarantined/tmp litter, then LRU-evict to ``max_bytes``.
 
-        Oldest-written entries go first (every write refreshes mtime via
-        the tmp+rename, so mtime is last-write recency).  Returns
-        ``(entries_removed, bytes_freed)``.  Races with concurrent
-        writers are benign: a vanished file is skipped, and evicting an
-        entry another process still wants only costs it a re-collection.
+        Quarantined ``*.npz.corrupt`` entries and orphaned ``*.tmp``
+        files (a writer SIGKILLed between ``mkstemp`` and the atomic
+        rename) are always removed — they serve no lookup and only
+        accumulate.  Then, when ``max_bytes`` is given, oldest-written
+        live entries go first (every write refreshes mtime via the
+        tmp+rename, so mtime is last-write recency).  Returns
+        ``(entries_removed, bytes_freed)`` over both phases.  Races with
+        concurrent writers are benign: a vanished file is skipped, and
+        evicting an entry another process still wants only costs it a
+        re-collection.
         """
-        if max_bytes < 0:
+        if max_bytes is not None and max_bytes < 0:
             raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
-        files = []
-        if self.root.exists():
-            for f in self.root.glob("*.npz"):
-                try:
-                    st = f.stat()
-                except OSError:
-                    continue
-                files.append((st.st_mtime, st.st_size, f))
-        total = sum(size for _, size, _ in files)
         removed = 0
         freed = 0
+        for f in self._glob("*.npz.corrupt") + self._glob("*.tmp"):
+            try:
+                size = f.stat().st_size
+                f.unlink()
+            except OSError:
+                continue
+            removed += 1
+            freed += size
+        if max_bytes is None:
+            return removed, freed
+        files = []
+        for f in self._glob("*.npz"):
+            try:
+                st = f.stat()
+            except OSError:
+                continue
+            files.append((st.st_mtime, st.st_size, f))
+        total = sum(size for _, size, _ in files)
         for _, size, f in sorted(files, key=lambda t: (t[0], t[2].name)):
             if total <= max_bytes:
                 break
@@ -263,13 +320,21 @@ class SweepCache:
         return removed, freed
 
     def clear(self) -> int:
-        """Delete every cache entry; returns how many were removed."""
+        """Delete every entry (live, quarantined, tmp); returns how many
+        live entries were removed.  Safe against concurrent clears."""
         n = 0
-        if self.root.exists():
-            for f in self.root.glob("*.npz"):
+        for f in self._glob("*.npz"):
+            try:
                 f.unlink()
-                n += 1
+            except OSError:
+                continue
+            n += 1
+        for f in self._glob("*.npz.corrupt") + self._glob("*.tmp"):
+            try:
+                f.unlink()
+            except OSError:
+                pass
         return n
 
     def __len__(self) -> int:
-        return len(list(self.root.glob("*.npz"))) if self.root.exists() else 0
+        return len(self._glob("*.npz"))

@@ -1,6 +1,6 @@
 """``python -m repro`` — the paper's tool as a command line.
 
-Nine subcommands over the ``repro.analysis`` Session API:
+Eleven subcommands over the ``repro.analysis`` Session API:
 
     devices    list registered devices and their table-cache state
     profile    one workload -> utilization report + verdict
@@ -16,8 +16,17 @@ Nine subcommands over the ``repro.analysis`` Session API:
     lint       symbolic jaxpr-level kernel lint (KERN rules) over the
                registered Pallas kernels — same gate/SARIF machinery
     cache      persistent counter-cache maintenance: stats (entries,
-               bytes, per-provider breakdown), clear, and
-               prune --max-bytes (LRU-by-mtime eviction)
+               bytes, quarantined corrupt files, per-provider
+               breakdown), clear, and prune --max-bytes
+               (LRU-by-mtime eviction; always removes quarantined
+               and orphaned tmp files first)
+    serve      long-running localhost profiling daemon: JSON jobs over
+               HTTP onto a bounded worker pool sharing one memo +
+               persistent counter cache, with retries, per-call
+               timeouts, circuit breakers and degraded fallbacks
+               (see repro.service)
+    client     stdlib HTTP client for a running daemon: health,
+               status, schema, and job submission
 
 ``audit`` and ``lint`` share the gating surface (``--fail-on``,
 ``--suppress``, ``--advise``, ``--num-cores``, ``--no-artifact``) and
@@ -77,6 +86,42 @@ def _nonneg_int(text: str) -> int:
     if value < 0:
         raise argparse.ArgumentTypeError(
             f"must be a non-negative integer, got {text!r}")
+    return value
+
+
+def _positive_float(text: str) -> float:
+    """argparse type: a finite float > 0."""
+    try:
+        value = float(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"invalid float value: {text!r}")
+    if not value > 0 or value != value or value == float("inf"):
+        raise argparse.ArgumentTypeError(
+            f"must be a positive finite number, got {text!r}")
+    return value
+
+
+def _rate(text: str) -> float:
+    """argparse type: a probability in [0, 1]."""
+    try:
+        value = float(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"invalid float value: {text!r}")
+    if not 0.0 <= value <= 1.0:
+        raise argparse.ArgumentTypeError(
+            f"must be in [0, 1], got {text!r}")
+    return value
+
+
+def _port(text: str) -> int:
+    """argparse type: a TCP port (0 = ephemeral, for serve only)."""
+    try:
+        value = int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"invalid int value: {text!r}")
+    if not 0 <= value <= 65535:
+        raise argparse.ArgumentTypeError(
+            f"must be a port in [0, 65535], got {text!r}")
     return value
 
 
@@ -513,6 +558,9 @@ def cmd_cache(args) -> int:
             return 0
         lines = [f"cache root: {stats['root']}",
                  f"{stats['entries']} entries, {fmt_bytes(stats['bytes'])}"]
+        if stats["quarantined"]:
+            lines.append(f"{stats['quarantined']} quarantined corrupt "
+                         f"file(s) — 'cache prune' deletes them")
         for source, b in stats["by_provider"].items():
             lines.append(f"  {source:>12}  {b['entries']:>6} entries  "
                          f"{fmt_bytes(b['bytes']):>12}")
@@ -522,11 +570,67 @@ def cmd_cache(args) -> int:
         removed = cache.clear()
         _emit(f"removed {removed} cache entries", args)
         return 0
-    # prune (argparse validation guarantees --max-bytes is present)
+    # prune (quarantined/tmp litter always goes; --max-bytes adds LRU)
     removed, freed = cache.prune(args.max_bytes)
     stats = cache.stats()
     _emit(f"pruned {removed} entries ({fmt_bytes(freed)}); "
           f"{stats['entries']} left ({fmt_bytes(stats['bytes'])})", args)
+    return 0
+
+
+def cmd_serve(args) -> int:
+    """Run the localhost profiling daemon until interrupted.
+
+    All resilience knobs (workers, queue depth, deadlines, retries,
+    breaker thresholds, fault-injection rates for chaos testing) come in
+    as flags, are range-checked up front by the argparse types, and land
+    in one ``ServiceConfig``; the daemon itself lives in
+    ``repro.service`` and is exercised in-process by the test suite.
+    """
+    from repro.service import ServiceConfig
+    from repro.service.server import serve
+
+    config = ServiceConfig(
+        host=args.host, port=args.port, workers=args.workers,
+        queue_depth=args.queue_depth, device=args.device,
+        provider=args.provider, fallbacks=tuple(args.fallbacks),
+        timeout_s=args.timeout, max_timeout_s=args.max_timeout,
+        max_points=args.max_points, call_timeout_s=args.call_timeout,
+        retries=args.retries, backoff_base_s=args.backoff_base,
+        breaker_threshold=args.breaker_threshold,
+        breaker_cooldown_s=args.breaker_cooldown,
+        persistent_cache=not args.no_cache,
+        fault_rate=args.fault_rate, latency_rate=args.latency_rate,
+        latency_s=args.latency_s, corrupt_rate=args.corrupt_rate,
+        fault_seed=args.fault_seed)
+    serve(config, port_file=args.port_file)
+    return 0
+
+
+def cmd_client(args) -> int:
+    """Talk to a running daemon (health / status / schema / submit)."""
+    from repro.service import ServiceClient, ServiceError
+
+    client = ServiceClient(args.host, args.port, timeout_s=args.timeout)
+    try:
+        if args.action == "submit":
+            if args.job_file:
+                payload = json.loads(Path(args.job_file).read_text())
+            else:
+                payload = json.loads(args.job)
+            body = client.submit(payload,
+                                 retries_on_busy=args.retries_on_busy)
+        else:
+            body = getattr(client, args.action)()
+    except ServiceError as exc:
+        print(f"error: {exc}" + (f" (HTTP {exc.status})"
+                                 if exc.status else ""), file=sys.stderr)
+        return 1
+    except json.JSONDecodeError as exc:
+        print(f"error: job payload is not valid JSON: {exc}",
+              file=sys.stderr)
+        return 2
+    _emit(json.dumps(body, indent=2), args)
     return 0
 
 
@@ -776,6 +880,100 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--output", metavar="PATH", default=None)
     p.set_defaults(func=cmd_cache)
 
+    p = sub.add_parser(
+        "serve",
+        help="run the localhost profiling daemon (see repro.service)")
+    p.add_argument("--host", default="127.0.0.1",
+                   help="bind address (default 127.0.0.1 — localhost "
+                        "only)")
+    p.add_argument("--port", type=_port, default=8642,
+                   help="TCP port; 0 binds an ephemeral port, printed "
+                        "on start (default %(default)s)")
+    p.add_argument("--port-file", default=None, metavar="PATH",
+                   help="write the bound port to PATH (for scripts "
+                        "using --port 0)")
+    p.add_argument("--workers", type=_positive_int, default=4,
+                   help="worker threads (default %(default)s)")
+    p.add_argument("--queue-depth", type=_positive_int, default=32,
+                   help="pending jobs before 429 load-shedding "
+                        "(default %(default)s)")
+    p.add_argument("--device", default="v5e",
+                   help="default device for sessions (default v5e)")
+    p.add_argument("--provider", default="trace",
+                   help="primary counter provider (default trace)")
+    p.add_argument("--fallbacks", nargs="+", default=["trace"],
+                   metavar="PROVIDER",
+                   help="degraded fallback chain after the primary "
+                        "(default: trace)")
+    p.add_argument("--timeout", type=_positive_float, default=30.0,
+                   help="default per-job deadline seconds "
+                        "(default %(default)s)")
+    p.add_argument("--max-timeout", type=_positive_float, default=300.0,
+                   help="largest timeout_s a job may request "
+                        "(default %(default)s)")
+    p.add_argument("--max-points", type=_positive_int, default=4096,
+                   help="largest sweep grid a single job may expand to "
+                        "(default %(default)s)")
+    p.add_argument("--call-timeout", type=_positive_float, default=10.0,
+                   help="per-provider-call timeout seconds "
+                        "(default %(default)s)")
+    p.add_argument("--retries", type=_nonneg_int, default=2,
+                   help="transient-failure retries per provider "
+                        "(default %(default)s; 0 disables)")
+    p.add_argument("--backoff-base", type=_positive_float, default=0.05,
+                   help="first retry backoff seconds, doubling per "
+                        "attempt (default %(default)s)")
+    p.add_argument("--breaker-threshold", type=_positive_int, default=5,
+                   help="consecutive failures that open a provider's "
+                        "circuit breaker (default %(default)s)")
+    p.add_argument("--breaker-cooldown", type=_positive_float, default=5.0,
+                   help="seconds an open breaker waits before its "
+                        "half-open probe (default %(default)s)")
+    p.add_argument("--no-cache", action="store_true",
+                   help="disable the persistent counter cache (and with "
+                        "it the cached-stale fallback)")
+    chaos = p.add_argument_group(
+        "fault injection (chaos testing; all off by default)")
+    chaos.add_argument("--fault-rate", type=_rate, default=0.0,
+                       help="probability a provider call raises an "
+                            "injected transient fault")
+    chaos.add_argument("--latency-rate", type=_rate, default=0.0,
+                       help="probability a provider call sleeps "
+                            "--latency-s first")
+    chaos.add_argument("--latency-s", type=_positive_float, default=0.05,
+                       help="injected latency seconds "
+                            "(default %(default)s)")
+    chaos.add_argument("--corrupt-rate", type=_rate, default=0.0,
+                       help="probability a provider call returns "
+                            "structurally corrupt counters")
+    chaos.add_argument("--fault-seed", type=_nonneg_int, default=0,
+                       help="seed for the deterministic injection "
+                            "schedule (default %(default)s)")
+    p.set_defaults(func=cmd_serve)
+
+    p = sub.add_parser(
+        "client",
+        help="query or submit jobs to a running daemon")
+    p.add_argument("action", choices=("health", "status", "schema",
+                                      "submit"),
+                   help="health/status/schema: GET endpoints; submit: "
+                        "POST one job payload")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=_port, default=8642,
+                   help="daemon port (default %(default)s)")
+    p.add_argument("--timeout", type=_positive_float, default=60.0,
+                   help="HTTP timeout seconds (default %(default)s)")
+    p.add_argument("--job", default=None, metavar="JSON",
+                   help="inline job payload for submit")
+    p.add_argument("--job-file", default=None, metavar="PATH",
+                   help="file with the job payload for submit")
+    p.add_argument("--retries-on-busy", type=_nonneg_int, default=0,
+                   help="retry 429 responses this many times, honoring "
+                        "Retry-After (default 0)")
+    p.add_argument("--output", metavar="PATH", default=None,
+                   help="also write the response to PATH")
+    p.set_defaults(func=cmd_client)
+
     return ap
 
 
@@ -803,6 +1001,25 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
             ap.error("cache prune requires --max-bytes")
         if args.max_bytes is not None and args.max_bytes < 0:
             ap.error(f"--max-bytes must be >= 0, got {args.max_bytes}")
+    if args.command == "serve":
+        if args.max_timeout < args.timeout:
+            ap.error(f"--max-timeout {args.max_timeout} must be >= "
+                     f"--timeout {args.timeout}")
+        if args.call_timeout > args.max_timeout:
+            ap.error(f"--call-timeout {args.call_timeout} must be <= "
+                     f"--max-timeout {args.max_timeout} (a single call "
+                     f"may not outlive any job deadline)")
+    if args.command == "client":
+        if args.port == 0:
+            ap.error("--port 0 is only meaningful for serve (ephemeral "
+                     "bind); the client needs the daemon's actual port")
+        if args.action == "submit":
+            if bool(args.job) == bool(args.job_file):
+                ap.error("submit needs exactly one of --job JSON or "
+                         "--job-file PATH")
+        elif args.job or args.job_file:
+            ap.error(f"--job/--job-file only apply to submit, not "
+                     f"{args.action!r}")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:

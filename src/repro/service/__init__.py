@@ -1,0 +1,37 @@
+"""Profiling-as-a-service: the paper's tool behind a localhost daemon.
+
+``python -m repro serve`` turns the ``Session`` API into a long-running
+HTTP service: ``WorkloadSpec`` JSON jobs (profile / sweep / advise /
+validate) are queued onto a bounded worker pool that shares one
+cross-request memo and persistent ``SweepCache`` per device — a hot spec
+costs zero collection no matter which client asks.  Every provider call
+runs through ``repro.analysis.resilience`` (deadlines, retries,
+breakers, degraded fallbacks), so the daemon sheds load with 429s and
+degrades with marked responses instead of hanging or five-hundreding.
+
+    repro serve --port 8642 --workers 4
+    repro client --port 8642 submit --kind profile \
+        --workload indices --size 2^14 --dist solid
+
+Python surface::
+
+    from repro.service import ProfilingService, ServiceConfig, serve
+    svc = ProfilingService(ServiceConfig(workers=4))
+    svc.start()
+    response = svc.submit({"kind": "profile",
+                           "workload": {"workload": "indices"}})
+"""
+
+from repro.service.client import ServiceClient, ServiceError  # noqa: F401
+from repro.service.jobs import (  # noqa: F401
+    JOB_KINDS,
+    Job,
+    JobError,
+    parse_job,
+)
+from repro.service.server import (  # noqa: F401
+    ProfilingService,
+    ServiceConfig,
+    ServiceOverloaded,
+    serve,
+)
