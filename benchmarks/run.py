@@ -36,6 +36,12 @@ Prints ``name,us_per_call,derived`` CSV rows (spec format):
                                 and breaker-trip recovery under
                                 injected faults
                                 (CI gate via --service-gate)
+  * heatmap_overhead          — telemetry-on vs telemetry-off sweep
+                                wall-clock (the observability layer must
+                                cost < 3%) plus heat-map/CounterSet
+                                bit-consistency and the §5 hist-vs-hist2
+                                localization check
+                                (CI gate via --obs-gate)
   * kernel_walltime           — interpret-mode Pallas kernel wall times
                                 (regression canary; not TPU numbers)
   * roofline_table            — per (arch x shape x mesh) terms from the
@@ -599,6 +605,75 @@ def service_load() -> None:
          f"recovery_ms={recovery_ms:.0f}")
 
 
+LAST_OBS: dict | None = None
+
+
+def heatmap_overhead() -> None:
+    """Observability cost + heat-map consistency (PR 10).
+
+    Times the same cold 16-point indices sweep through fresh sessions
+    with telemetry enabled and disabled (interleaved, min over repeats
+    so scheduler noise cancels); the instrumented pipeline may cost at
+    most 3% over the uninstrumented one.  Alongside, runs the §5
+    heat-map case: per-bin attribution must stay bitwise-consistent
+    with the provider's counters, surface hot bins on the contended
+    input, and show ``hist2``'s rotation strictly lowering the top-bin
+    replay share.  ``--obs-gate`` turns all four into a CI gate.
+    """
+    from repro.core.counters import bitwise_equal
+    from repro.obs import heatmap_for_spec, telemetry
+
+    base = WorkloadSpec.from_indices(
+        np.zeros(1 << 17, np.int64), 256, label="obs-overhead")
+    specs = base.grid(waves_per_tile=[2, 4, 8, 16],
+                      pipeline_depth=[2, 4, 6, 8])
+    session()   # resolve the table cache before any timed run
+
+    def run_once() -> float:
+        sess = Session(device="v5e")    # fresh memo: collection really runs
+        t0 = time.perf_counter()
+        sess.analyze(specs)
+        return time.perf_counter() - t0
+
+    run_once()  # warm the interpreter/allocator paths
+    on_times, off_times = [], []
+    for _ in range(5):
+        telemetry.set_enabled(True)
+        on_times.append(run_once())
+        with telemetry.disabled():
+            off_times.append(run_once())
+    telemetry.set_enabled(True)
+    on_s, off_s = min(on_times), min(off_times)
+    overhead_pct = (on_s - off_s) / off_s * 100.0
+
+    img = make_image("solid", 1 << 14)
+    shares, consistent, hot_bins = {}, True, 0
+    for variant in ("hist", "hist2"):
+        spec = WorkloadSpec.from_histogram(
+            np.asarray(img), label=f"obs-{variant}", variant=variant)
+        hm = heatmap_for_spec(spec)
+        shares[variant] = hm.top_bin_share
+        consistent &= bitwise_equal(hm.counters, session().collect(spec))
+        consistent &= int(hm.hits.sum()) == (1 << 14) * img.shape[1]
+        if variant == "hist":
+            hot_bins = int(hm.hot_mask.sum())
+
+    global LAST_OBS
+    LAST_OBS = {
+        "overhead_pct": float(overhead_pct),
+        "consistent": bool(consistent),
+        "localized": shares["hist2"] < shares["hist"],
+        "hot_bins": hot_bins,
+    }
+    emit("heatmap_overhead_16pt", on_s * 1e6,
+         f"overhead_pct={overhead_pct:.2f};"
+         f"telemetry_off_ms={off_s * 1e3:.1f};"
+         f"telemetry_on_ms={on_s * 1e3:.1f};"
+         f"hist_share={shares['hist']:.4f};"
+         f"hist2_share={shares['hist2']:.4f};"
+         f"hot_bins={hot_bins};consistent={int(consistent)}")
+
+
 def kernel_walltime() -> None:
     img = jnp.asarray(make_image("uniform", 1 << 16))
     us = _timeit(lambda: hist_ops.histogram(img).block_until_ready())
@@ -641,8 +716,8 @@ def roofline_table() -> None:
 ALL = [fig1_service_time_table, fig3_utilization_sweep, fig4_popc_vs_fao,
        fig5_reorder_speedup, sec5_model_vs_measured, lint_static_vs_trace,
        moe_dispatch_profile, sweep_grid_parallel, profile_batch_vs_loop,
-       collect_batch_vs_loop, advise_search, service_load, kernel_walltime,
-       roofline_table]
+       collect_batch_vs_loop, advise_search, service_load, heatmap_overhead,
+       kernel_walltime, roofline_table]
 
 
 def main() -> None:
@@ -668,6 +743,12 @@ def main() -> None:
                          "32-candidate frontier via one batch evaluation "
                          "(no scalar profiling) and the warm re-run "
                          "collected nothing")
+    ap.add_argument("--obs-gate", action="store_true",
+                    help="CI gate: exit 1 unless heatmap_overhead "
+                         "measured < 3%% telemetry overhead, heat-map "
+                         "counters bit-matched the provider, hot bins "
+                         "surfaced on the contended input, and hist2's "
+                         "top-bin share came out below hist's")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for fn in ALL:
@@ -737,6 +818,31 @@ def main() -> None:
                             "cleared — breaker never re-closed")
         if problems:
             print("error: service_load gate failed: "
+                  + "; ".join(problems), file=sys.stderr)
+            sys.exit(1)
+    if args.obs_gate:
+        import sys
+        if LAST_OBS is None:
+            print("error: --obs-gate set but heatmap_overhead did not run",
+                  file=sys.stderr)
+            sys.exit(2)
+        o = LAST_OBS
+        problems = []
+        if o["overhead_pct"] >= 3.0:
+            problems.append(f"telemetry overhead {o['overhead_pct']:.2f}% "
+                            f"at or over the 3% bound")
+        if not o["consistent"]:
+            problems.append("heat-map counters diverged from the "
+                            "provider's collect() (bit-consistency "
+                            "broken)")
+        if o["hot_bins"] < 1:
+            problems.append("no hot bins surfaced on the contended "
+                            "solid histogram")
+        if not o["localized"]:
+            problems.append("hist2 top-bin share not strictly below "
+                            "hist — the §5 localization signal is gone")
+        if problems:
+            print("error: heatmap_overhead gate failed: "
                   + "; ".join(problems), file=sys.stderr)
             sys.exit(1)
     if args.advise_gate:

@@ -1,0 +1,11 @@
+"""repro: shared-memory atomic bottleneck modeling (arXiv:2503.17893 repro).
+
+Kept import-light on purpose: subpackages (``repro.analysis``,
+``repro.kernels``, ``repro.service``, ``repro.obs``) pull in their own
+dependencies lazily; importing ``repro`` itself must stay cheap so
+``repro --version`` and tooling probes never pay the jax import.
+"""
+
+__version__ = "0.10.0"
+
+__all__ = ["__version__"]

@@ -89,6 +89,25 @@ class TraceProvider:
                 csets[i] = cs
         return CounterFrame.from_sets(csets)
 
+    def committed_stream(self, spec):
+        """(stream, job_class, waves_per_tile) for attributable specs.
+
+        The public stream-planning hook the observability layer rides
+        (``repro.obs.heatmap``): the exact committed index stream,
+        class, and geometry this provider feeds ``trace_from_indices``,
+        so per-bin attribution stays bit-consistent with ``collect``.
+        Sources that carry no index stream (pre-recorded ``trace``,
+        opaque ``run``, ``hlo``) cannot be attributed per bin.
+        """
+        if spec.kernel is not None:
+            return self._stream_plan(spec)
+        if spec.indices is not None:
+            return (np.asarray(spec.indices).reshape(-1),
+                    spec.job_class, spec.waves_per_tile or 1)
+        raise ValueError(
+            f"spec {spec.label!r} has no committed index stream to "
+            f"attribute (kernel/indices sources only)")
+
     def _from_trace(self, tr: counters_mod.WaveTrace, spec) -> CounterSet:
         """The one aggregation call both scalar and batch paths share."""
         return CounterSet.from_trace(

@@ -44,6 +44,21 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.counters import CounterSet
+from repro.obs import telemetry as _telemetry
+
+_CALL_SECONDS = _telemetry.histogram(
+    "repro_provider_call_seconds", "Per-provider collect call latency",
+    ("provider",))
+_RETRIES = _telemetry.counter(
+    "repro_provider_retries_total",
+    "Transient provider errors that entered the retry path", ("provider",))
+_BREAKER_TRANSITIONS = _telemetry.counter(
+    "repro_breaker_transitions_total",
+    "Circuit-breaker state transitions", ("provider", "to"))
+_FALLBACKS = _telemetry.counter(
+    "repro_provider_fallbacks_total",
+    "Degraded collects served by a fallback source",
+    ("provider", "fallback"))
 
 
 # -- error taxonomy ----------------------------------------------------------
@@ -487,12 +502,15 @@ class ResilientProvider:
                 record_event({"kind": "fallback", "label": spec.label,
                               "provider": self.name,
                               "fallback": self._key(prov)})
+                _FALLBACKS.inc(provider=self.name,
+                               fallback=self._key(prov))
             return cset
         stale = self._collect_stale(spec, device)
         if stale is not None:
             record_event({"kind": "fallback", "label": spec.label,
                           "provider": self.name,
                           "fallback": "cached-stale"})
+            _FALLBACKS.inc(provider=self.name, fallback="cached-stale")
             return stale
         detail = "; ".join(f"{name}: {type(exc).__name__}: {exc}"
                            for name, exc in errors) or "no provider admitted"
@@ -504,13 +522,23 @@ class ResilientProvider:
             f"{spec.label!r}: every provider failed and no stale cache "
             f"entry exists ({detail})", errors)
 
+    def _note_breaker(self, prov, before: str) -> None:
+        """Count a breaker state transition (telemetry, no behaviour)."""
+        after = self.breakers[id(prov)].state
+        if after != before:
+            _BREAKER_TRANSITIONS.inc(
+                provider=self._breaker_labels[id(prov)], to=after)
+
     def _collect_one(self, prov, spec, device, deadline, errors):
         """Timeout + retry + breaker for one provider; None = move on."""
         br = self.breakers[id(prov)]
         for attempt in range(self.retry.attempts):
             if deadline is not None and deadline.expired:
                 return None
-            if not br.allow():
+            br_state = br.state
+            admitted = br.allow()
+            self._note_breaker(prov, br_state)  # open -> half-open probes
+            if not admitted:
                 record_event({"kind": "breaker-skip", "label": spec.label,
                               "provider": self._key(prov)})
                 return None
@@ -519,19 +547,27 @@ class ResilientProvider:
                 remaining = deadline.remaining()
                 timeout = remaining if timeout is None \
                     else min(timeout, remaining)
+            t0 = time.perf_counter()
             try:
                 cset = call_with_timeout(
                     lambda: prov.collect(spec, device), timeout)
+                _CALL_SECONDS.observe(time.perf_counter() - t0,
+                                      provider=self._key(prov))
                 problem = counter_set_error(cset)
                 if problem:
                     raise CorruptCounterError(
                         f"{self._key(prov)} returned corrupt counters "
                         f"for {spec.label!r}: {problem}")
+                br_state = br.state
                 br.record_success()
+                self._note_breaker(prov, br_state)
                 return cset
             except TRANSIENT_ERRORS as exc:
+                br_state = br.state
                 br.record_failure()
+                self._note_breaker(prov, br_state)
                 errors.append((self._key(prov), exc))
+                _RETRIES.inc(provider=self._key(prov))
                 record_event({"kind": "retry", "label": spec.label,
                               "provider": self._key(prov),
                               "attempt": attempt,
@@ -543,7 +579,9 @@ class ResilientProvider:
                     if delay > 0:
                         self._sleep(delay)
             except Exception as exc:  # permanent: straight to the next
+                br_state = br.state
                 br.record_failure()
+                self._note_breaker(prov, br_state)
                 errors.append((self._key(prov), exc))
                 record_event({"kind": "permanent", "label": spec.label,
                               "provider": self._key(prov),

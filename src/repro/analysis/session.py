@@ -22,10 +22,12 @@ relative errors and the utilization delta.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import io
 import json
 import threading
+import time
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -39,6 +41,26 @@ from repro.analysis.workload import WorkloadSpec
 from repro.core import bottleneck, profiler, qmodel
 from repro.core import counters as counters_mod
 from repro.core.counters import CounterFrame, CounterSet
+from repro.obs import telemetry as _telemetry
+from repro.obs.heatmap import DEFAULT_HOT_DEGREE, Heatmap, heatmap_for_spec
+
+_SESSION_CALLS = _telemetry.counter(
+    "repro_session_calls_total", "Session entry-point invocations",
+    ("method",))
+_SESSION_SECONDS = _telemetry.histogram(
+    "repro_session_seconds", "Session entry-point latency", ("method",))
+_SESSION_POINTS = _telemetry.counter(
+    "repro_session_points_total", "Workload points analyzed")
+
+
+@contextlib.contextmanager
+def _observed(method: str, **attrs):
+    """Count + time + span one Session entry point (telemetry-gated)."""
+    _SESSION_CALLS.inc(method=method)
+    t0 = time.perf_counter()
+    with _telemetry.span(f"session.{method}", **attrs):
+        yield
+    _SESSION_SECONDS.observe(time.perf_counter() - t0, method=method)
 
 
 @dataclasses.dataclass
@@ -315,7 +337,8 @@ class Session:
         A single point is just a one-row ``CounterFrame`` through the
         same columnar batch path sweeps use.
         """
-        self._last = self.analyze([spec])
+        with _observed("profile", label=spec.label):
+            self._last = self.analyze([spec])
         return self._last.profiles[0]
 
     def classify(self, spec: WorkloadSpec) -> bottleneck.BottleneckVerdict:
@@ -363,7 +386,8 @@ class Session:
                 raise ValueError(
                     f"shard {shard_index}/{shards} owns no points — the "
                     f"grid is smaller than the shard count")
-        self._last = self.analyze(specs, parallel=parallel)
+        with _observed("sweep", points=len(specs)):
+            self._last = self.analyze(specs, parallel=parallel)
         return self._last
 
     def analyze(self, specs: Sequence[WorkloadSpec], *,
@@ -382,8 +406,12 @@ class Session:
         specs = list(specs)
         if not specs:
             raise ValueError("analyze() needs at least one WorkloadSpec")
-        csets = self.collect_cached_batch(specs, parallel=parallel)
-        return self._as_result(specs, self._profile_batch(csets))
+        with _observed("analyze", points=len(specs)):
+            _SESSION_POINTS.inc(len(specs))
+            with _telemetry.span("session.collect", points=len(specs)):
+                csets = self.collect_cached_batch(specs, parallel=parallel)
+            with _telemetry.span("session.model", points=len(specs)):
+                return self._as_result(specs, self._profile_batch(csets))
 
     def advise(self, spec: WorkloadSpec, *, catalog=None, depth: int = 2,
                beam_width: int = 8, top_k: int = 5, validate_top: int = 0,
@@ -442,6 +470,21 @@ class Session:
                              num_cores=num_cores)
         return lint_registry(kernels, session=self, suppress=suppress,
                              num_cores=num_cores)
+
+    def heatmap(self, spec: WorkloadSpec, *,
+                hot_degree: float = DEFAULT_HOT_DEGREE) -> Heatmap:
+        """Per-bin contention attribution for one workload point.
+
+        Turns the trace provider's committed index stream into per-bin
+        hit counts, serialized-replay counts, per-bin max wave degree,
+        and the per-wave contention series (``repro.obs.heatmap``) —
+        "the unit is saturated" becomes "these bins are, and the skew
+        peaks at wave W".  The embedded ``CounterSet`` is bitwise-equal
+        to what ``profile`` reports for the same spec; only ``kernel``
+        and ``indices`` sources carry a stream to attribute.
+        """
+        with _observed("heatmap", label=spec.label):
+            return heatmap_for_spec(spec, hot_degree=hot_degree)
 
     def speedup(self, before: WorkloadSpec, after: WorkloadSpec) -> float:
         """Predicted speedup of ``after`` over ``before``.

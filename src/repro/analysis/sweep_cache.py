@@ -34,6 +34,12 @@ from typing import Optional, Union
 import numpy as np
 
 from repro.core.counters import CounterSet
+from repro.obs import telemetry as _telemetry
+
+_CACHE_LOOKUPS = _telemetry.counter(
+    "repro_sweep_cache_lookups_total",
+    "SweepCache.get outcomes (bulk reads route through get too)",
+    ("result",))
 
 CACHE_VERSION = 1
 
@@ -199,12 +205,18 @@ class SweepCache:
         """
         path = self.path(key)
         try:
-            return load_counter_set(path)
+            hit = load_counter_set(path)
+            _CACHE_LOOKUPS.inc(result="hit")
+            return hit
         except FileNotFoundError:
+            _CACHE_LOOKUPS.inc(result="miss")
             return None
         except Exception:
             if path.exists():
                 self._quarantine(path)
+                _CACHE_LOOKUPS.inc(result="quarantined")
+            else:
+                _CACHE_LOOKUPS.inc(result="miss")
             return None
 
     def put(self, key: str, cset: CounterSet) -> None:

@@ -1,9 +1,13 @@
 """``python -m repro`` — the paper's tool as a command line.
 
-Eleven subcommands over the ``repro.analysis`` Session API:
+Twelve subcommands over the ``repro.analysis`` Session API:
 
     devices    list registered devices and their table-cache state
     profile    one workload -> utilization report + verdict
+    heatmap    per-bin contention attribution for one workload point:
+               hit/replay counts per destination bin, per-bin max wave
+               degree, and the per-wave contention sparkline
+               (repro.obs.heatmap)
     sweep      cartesian grid sweep (sizes x geometry), batch-collected;
                --shards N --shard-index i slices the grid across
                processes (merging through the persistent counter cache),
@@ -58,6 +62,7 @@ import sys
 from pathlib import Path
 from typing import Optional, Sequence
 
+from repro import __version__
 from repro.analysis import DEVICES, Session, WorkloadSpec
 from repro.cli import workloads as wl
 from repro.core import bottleneck
@@ -205,6 +210,22 @@ def cmd_profile(args) -> int:
     sess = _session(args)
     sess.profile(specs[0])
     _emit(sess.report(args.format), args)
+    return 0
+
+
+def cmd_heatmap(args) -> int:
+    """Per-bin contention attribution for exactly one workload point."""
+    specs, axes = wl.build_specs(args)
+    specs = wl.expand_grid(specs, axes)
+    if len(specs) != 1:
+        raise ValueError(
+            f"heatmap takes exactly one workload point, got {len(specs)} — "
+            f"use 'sweep' for multi-value axes")
+    sess = _session(args)
+    hm = sess.heatmap(specs[0], hot_degree=args.hot_degree)
+    ext = {"text": "txt", "json": "json", "csv": "csv"}[args.format]
+    _emit(hm.render(args.format, top_k=args.top_k), args,
+          default_artifact=f"heatmap-{specs[0].label}.{ext}")
     return 0
 
 
@@ -715,6 +736,10 @@ def build_parser() -> argparse.ArgumentParser:
         prog="repro",
         description="Shared-memory atomic bottleneck profiler "
                     "(the paper's two tools as a command line)")
+    # handled by argparse before subcommand dispatch: `repro --version`
+    # exits 0 without requiring (or running) any subcommand
+    ap.add_argument("--version", action="version",
+                    version=f"%(prog)s {__version__}")
     sub = ap.add_subparsers(dest="command", required=True)
 
     p = sub.add_parser("devices", help="list registered devices")
@@ -727,6 +752,19 @@ def build_parser() -> argparse.ArgumentParser:
     _add_common(p)
     _add_workload(p, multi=False)
     p.set_defaults(func=cmd_profile)
+
+    p = sub.add_parser(
+        "heatmap", help="per-bin contention attribution for one point")
+    _add_common(p)
+    _add_workload(p, multi=False)
+    p.add_argument("--top-k", type=_positive_int, default=16,
+                   help="bins shown in the text/json grid (default 16)")
+    p.add_argument("--hot-degree", type=_positive_float, default=2.0,
+                   help="wave degree at or above which a bin counts as "
+                        "hot (default 2.0)")
+    p.add_argument("--no-artifact", action="store_true",
+                   help="do not write the report under results/cli/")
+    p.set_defaults(func=cmd_heatmap)
 
     p = sub.add_parser(
         "sweep", help="grid sweep: sizes x geometry, concurrent points")

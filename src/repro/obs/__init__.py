@@ -1,0 +1,23 @@
+"""Observability layer: contention attribution + pipeline telemetry.
+
+Two halves, both importable without jax:
+
+* :mod:`repro.obs.heatmap` / :mod:`repro.obs.report` — per-bin,
+  per-wave contention attribution from committed index streams, with
+  text/json/csv renderers (``Session.heatmap``, ``repro heatmap``, and
+  the service's ``heatmap`` job kind all land here);
+* :mod:`repro.obs.telemetry` — the process-wide metrics registry
+  (Prometheus text exposition on the service's ``GET /metrics``) and
+  tracing spans with propagated trace ids.
+
+This package sits *below* ``repro.analysis`` and ``repro.service`` in
+the import graph: it depends only on ``repro.core`` and the stdlib, so
+every layer above can instrument itself without cycles.
+"""
+
+from repro.obs import report, telemetry
+from repro.obs.heatmap import (DEFAULT_HOT_DEGREE, Heatmap,
+                               heatmap_for_spec, heatmap_from_stream)
+
+__all__ = ["telemetry", "report", "Heatmap", "heatmap_for_spec",
+           "heatmap_from_stream", "DEFAULT_HOT_DEGREE"]

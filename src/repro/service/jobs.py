@@ -25,7 +25,7 @@ import math
 
 from repro.analysis.workload import WorkloadSpec
 
-JOB_KINDS = ("profile", "sweep", "advise", "validate")
+JOB_KINDS = ("profile", "sweep", "advise", "validate", "heatmap")
 
 # one declarative workload surface, shared with the CLI: every key the
 # ``repro.cli.workloads.build_specs`` namespace reads, with its default
@@ -178,7 +178,7 @@ def parse_job(payload, *, default_timeout_s: float = 30.0,
 
     specs = build_workload_specs(payload["workload"],
                                  max_points=max_points)
-    if kind in ("profile", "advise", "validate"):
+    if kind in ("profile", "advise", "validate", "heatmap"):
         _require(len(specs) == 1,
                  f"{kind} takes exactly one workload point, got "
                  f"{len(specs)} — use kind 'sweep' for multi-value axes")
@@ -195,6 +195,7 @@ _OPTION_SCHEMA = {
     "sweep": {"parallel": (1, True)},
     "profile": {},
     "validate": {},   # 'providers' handled separately
+    "heatmap": {"top_k": (1, True)},  # 'hot_degree' handled separately
 }
 _ADVISE_DEFAULTS = {"depth": 2, "beam_width": 8, "top_k": 5,
                     "validate_top": 0}
@@ -203,6 +204,8 @@ _ADVISE_DEFAULTS = {"depth": 2, "beam_width": 8, "top_k": 5,
 def _check_options(kind: str, options: dict) -> dict:
     schema = _OPTION_SCHEMA[kind]
     extra_keys = {"providers"} if kind == "validate" else set()
+    if kind == "heatmap":
+        extra_keys = {"hot_degree"}
     unknown = sorted(set(options) - set(schema) - extra_keys)
     _require(not unknown,
              f"unknown option(s) for kind {kind!r}: {', '.join(unknown)}")
@@ -212,6 +215,9 @@ def _check_options(kind: str, options: dict) -> dict:
             _check_number(name, options[name], minimum=minimum,
                           integral=integral)
             out[name] = int(options[name]) if integral else options[name]
+    if kind == "heatmap" and "hot_degree" in options:
+        _check_number("hot_degree", options["hot_degree"], minimum=1.0)
+        out["hot_degree"] = float(options["hot_degree"])
     if kind == "validate":
         providers = options.get("providers", ["trace", "kernel"])
         _require(isinstance(providers, list) and len(providers) >= 2

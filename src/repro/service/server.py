@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import queue
+import re
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -42,7 +43,23 @@ from repro.analysis.resilience import (
 )
 from repro.analysis.session import Session
 from repro.analysis.sweep_cache import SweepCache
-from repro.service.jobs import Job, JobError, describe_defaults, parse_job
+from repro.obs import telemetry as _telemetry
+from repro.service.jobs import (JOB_KINDS, Job, JobError, describe_defaults,
+                                parse_job)
+
+_QUEUE_DEPTH = _telemetry.gauge(
+    "repro_service_queue_depth", "Jobs waiting in the bounded queue")
+_JOBS_TOTAL = _telemetry.counter(
+    "repro_service_jobs_total", "Service jobs by kind and outcome",
+    ("kind", "outcome"))
+_JOB_SECONDS = _telemetry.histogram(
+    "repro_service_job_seconds", "Job wall-clock by kind and outcome",
+    ("kind", "outcome"))
+_BREAKER_OPEN = _telemetry.gauge(
+    "repro_circuit_breaker_open",
+    "1 while the named provider's circuit breaker is open", ("provider",))
+
+_TRACE_ID_RE = re.compile(r"[^A-Za-z0-9_-]")
 
 
 class ServiceOverloaded(RuntimeError):
@@ -97,13 +114,14 @@ class ServiceConfig:
 class _Ticket:
     """One queued job + the event its submitter blocks on."""
 
-    __slots__ = ("job", "done", "status", "body")
+    __slots__ = ("job", "done", "status", "body", "trace_id")
 
-    def __init__(self, job: Job) -> None:
+    def __init__(self, job: Job, trace_id: Optional[str] = None) -> None:
         self.job = job
         self.done = threading.Event()
         self.status: int = 503
         self.body: dict = {"ok": False, "error": "job was never run"}
+        self.trace_id = trace_id or _telemetry.new_trace_id()
 
 
 class ProfilingService:
@@ -177,7 +195,15 @@ class ProfilingService:
 
     # -- the request path -------------------------------------------------
 
-    def handle(self, payload) -> tuple[int, dict]:
+    @staticmethod
+    def _kind_label(payload) -> str:
+        """A *bounded* kind label for metrics (never raw client input)."""
+        if isinstance(payload, dict) and payload.get("kind") in JOB_KINDS:
+            return payload["kind"]
+        return "unknown"
+
+    def handle(self, payload,
+               trace_id: Optional[str] = None) -> tuple[int, dict]:
         """(http_status, json_body) for one job payload — never raises.
 
         The single entry point both the HTTP handler and in-process
@@ -185,13 +211,16 @@ class ProfilingService:
         one place.
         """
         try:
-            return 200, self.submit(payload)
+            return 200, self.submit(payload, trace_id=trace_id)
         except JobError as exc:
             self._count("invalid")
+            _JOBS_TOTAL.inc(kind=self._kind_label(payload),
+                            outcome="invalid")
             return 400, {"ok": False, "error": str(exc),
                          "error_kind": "invalid-job"}
         except ServiceOverloaded as exc:
             self._count("shed")
+            _JOBS_TOTAL.inc(kind=self._kind_label(payload), outcome="shed")
             return 429, {"ok": False, "error": str(exc),
                          "error_kind": "overloaded",
                          "retry_after_s": exc.retry_after_s}
@@ -209,7 +238,7 @@ class ProfilingService:
                          "error": f"{type(exc).__name__}: {exc}",
                          "error_kind": "internal"}
 
-    def submit(self, payload) -> dict:
+    def submit(self, payload, trace_id: Optional[str] = None) -> dict:
         """Parse, enqueue, and wait out one job; the success-path body.
 
         Raises ``JobError`` (malformed), ``ServiceOverloaded`` (queue
@@ -222,7 +251,7 @@ class ProfilingService:
         job = parse_job(payload, default_timeout_s=cfg.timeout_s,
                         max_timeout_s=cfg.max_timeout_s,
                         max_points=cfg.max_points)
-        ticket = _Ticket(job)
+        ticket = _Ticket(job, trace_id)
         try:
             self._queue.put_nowait(ticket)
         except queue.Full:
@@ -230,6 +259,7 @@ class ProfilingService:
                 f"queue full ({cfg.queue_depth} jobs pending) — retry "
                 f"shortly", retry_after_s=min(job.timeout_s, 1.0)) from None
         self._count("submitted")
+        _QUEUE_DEPTH.set(self._queue.qsize())
         # the worker enforces the deadline; the extra grace only covers
         # queue wait + scheduling, so a hung worker can never hang a client
         grace = job.timeout_s + cfg.timeout_s + 5.0
@@ -252,27 +282,42 @@ class ProfilingService:
             ticket = self._queue.get()
             if ticket is None:
                 return
+            _QUEUE_DEPTH.set(self._queue.qsize())
             try:
-                ticket.status, ticket.body = self._run_job(ticket.job)
+                with _telemetry.trace_scope(ticket.trace_id) as trace:
+                    ticket.status, ticket.body = self._run_job(ticket.job)
+                    ticket.body["trace_id"] = trace["id"]
+                    if ticket.status == 200:
+                        ticket.body["spans"] = trace["spans"]
             except Exception as exc:  # noqa: BLE001 — belt and braces
                 ticket.status = 503
                 ticket.body = {"ok": False,
                                "error": f"{type(exc).__name__}: {exc}",
-                               "error_kind": "internal"}
+                               "error_kind": "internal",
+                               "trace_id": ticket.trace_id}
             finally:
                 ticket.done.set()
+
+    def _observe_job(self, job: Job, outcome: str, started: float) -> None:
+        _JOBS_TOTAL.inc(kind=job.kind, outcome=outcome)
+        _JOB_SECONDS.observe(time.monotonic() - started,
+                             kind=job.kind, outcome=outcome)
 
     def _run_job(self, job: Job) -> tuple[int, dict]:
         started = time.monotonic()
         sess = self.session(job.device)
         try:
             with resilience_scope(job.timeout_s) as events:
-                result = self._dispatch(sess, job)
+                with _telemetry.span("service.dispatch", kind=job.kind,
+                                     label=job.label):
+                    result = self._dispatch(sess, job)
         except DeadlineExceeded as exc:
             # failure counters are handle()'s job (one count per request)
+            self._observe_job(job, "deadline", started)
             return 504, {"ok": False, "error": str(exc),
                          "error_kind": "deadline"}
         except (ResilienceExhausted, JobError, ValueError, OSError) as exc:
+            self._observe_job(job, "failed", started)
             return 503, {"ok": False,
                          "error": f"{type(exc).__name__}: {exc}",
                          "error_kind": "exhausted"}
@@ -282,6 +327,7 @@ class ProfilingService:
         self._count("completed")
         if degraded:
             self._count("degraded")
+        self._observe_job(job, "degraded" if degraded else "ok", started)
         return 200, {
             "ok": True,
             "kind": job.kind,
@@ -309,6 +355,12 @@ class ProfilingService:
             report = sess.validate(job.specs[0],
                                    providers=job.options["providers"])
             return report.to_dict()
+        if job.kind == "heatmap":
+            kw = {k: job.options[k] for k in ("hot_degree",)
+                  if k in job.options}
+            hm = sess.heatmap(job.specs[0], **kw)
+            return json.loads(hm.render(
+                "json", top_k=job.options.get("top_k", 16)))
         raise JobError(f"unknown job kind {job.kind!r}")
 
     # -- shared state -----------------------------------------------------
@@ -346,9 +398,22 @@ class ProfilingService:
         }
         if self.cache is not None:
             body["cache_root"] = str(self.cache.root)
+            body["cache"] = self.cache.stats()
         if self.fault is not None:
             body["fault_injection"] = self.fault.stats_snapshot()
         return body
+
+    def refresh_metrics(self) -> None:
+        """Push point-in-time gauges (queue, breakers) into the registry."""
+        _QUEUE_DEPTH.set(self._queue.qsize())
+        for name, snap in self.provider.breaker_states().items():
+            _BREAKER_OPEN.set(1.0 if snap.get("state") == "open" else 0.0,
+                              provider=name)
+
+    def metrics_text(self) -> str:
+        """The ``GET /metrics`` payload (Prometheus text exposition)."""
+        self.refresh_metrics()
+        return _telemetry.render()
 
 
 # -- HTTP layer --------------------------------------------------------------
@@ -363,11 +428,14 @@ class _Handler(BaseHTTPRequestHandler):
     def log_message(self, *args) -> None:   # quiet by default
         pass
 
-    def _reply(self, status: int, body: dict) -> None:
+    def _reply(self, status: int, body: dict,
+               trace_id: Optional[str] = None) -> None:
         data = json.dumps(body).encode()
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(data)))
+        if trace_id:
+            self.send_header("X-Repro-Trace-Id", trace_id)
         if status == 429:
             self.send_header(
                 "Retry-After",
@@ -375,25 +443,47 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(data)
 
+    def _reply_text(self, status: int, text: str,
+                    content_type: str) -> None:
+        data = text.encode()
+        self.send_response(status)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def _request_trace_id(self) -> str:
+        """Propagate the client's ``X-Repro-Trace-Id`` or mint one.
+
+        The inbound value is sanitized and bounded so a hostile header
+        can't smuggle bytes into responses or metrics.
+        """
+        raw = self.headers.get("X-Repro-Trace-Id", "")
+        cleaned = _TRACE_ID_RE.sub("", raw)[:64]
+        return cleaned or _telemetry.new_trace_id()
+
     def do_GET(self) -> None:               # noqa: N802 — http.server API
         if self.path == "/healthz":
             self._reply(200, {"ok": True})
         elif self.path == "/status":
             self._reply(200, self.service.status())
+        elif self.path == "/metrics":
+            self._reply_text(200, self.service.metrics_text(),
+                             "text/plain; version=0.0.4; charset=utf-8")
         elif self.path == "/schema":
-            self._reply(200, {"ok": True, "kinds": list(
-                ("profile", "sweep", "advise", "validate")),
-                "workload_defaults": describe_defaults()})
+            self._reply(200, {"ok": True, "kinds": list(JOB_KINDS),
+                              "workload_defaults": describe_defaults()})
         else:
             self._reply(404, {"ok": False,
                               "error": f"no such endpoint {self.path!r}",
                               "error_kind": "not-found"})
 
     def do_POST(self) -> None:              # noqa: N802 — http.server API
+        trace_id = self._request_trace_id()
         if self.path != "/v1/jobs":
             self._reply(404, {"ok": False,
                               "error": f"no such endpoint {self.path!r}",
-                              "error_kind": "not-found"})
+                              "error_kind": "not-found"}, trace_id)
             return
         try:
             length = int(self.headers.get("Content-Length", 0))
@@ -401,10 +491,12 @@ class _Handler(BaseHTTPRequestHandler):
         except (ValueError, OSError) as exc:
             self._reply(400, {"ok": False,
                               "error": f"unreadable JSON body: {exc}",
-                              "error_kind": "invalid-job"})
+                              "error_kind": "invalid-job",
+                              "trace_id": trace_id}, trace_id)
             return
-        status, body = self.service.handle(payload)
-        self._reply(status, body)
+        status, body = self.service.handle(payload, trace_id=trace_id)
+        body.setdefault("trace_id", trace_id)
+        self._reply(status, body, body.get("trace_id", trace_id))
 
 
 def make_http_server(service: ProfilingService,
